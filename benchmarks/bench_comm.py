@@ -1,0 +1,47 @@
+"""Paper Table 1 / 7 / 8: per-iteration communication by topology.
+
+Structural: counts gossip rounds (= ppermute launches) and bytes per node
+per iteration for a fixed model size, plus the theoretical transient-
+iteration complexity from the measured spectral gap (eq. 4).  Also measures
+the wall time of one fused DmSGD gossip (CPU, stacked reference path).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip, optim, spectral, topology
+from .common import emit, time_fn
+
+MODEL_BYTES = 4 * 1_000_000  # 1M-param f32 model buffer per node
+
+
+def run(n: int = 16) -> None:
+    tree = {"w": jnp.zeros((n, 250_000, 4), jnp.float32)}  # 1M f32 per node
+    for name in ["ring", "grid", "static_exp", "one_peer_exp",
+                 "random_match", "full"]:
+        top = topology.get_topology(name, n)
+        spec = gossip.gossip_spec(top, 0)
+        if spec["kind"] == "ppermute":
+            rounds = spec["rounds"]
+            bytes_per_iter = rounds * MODEL_BYTES * 2  # x + momentum payload
+        else:
+            rounds = 1
+            bytes_per_iter = top.max_degree * MODEL_BYTES * 2
+        us = time_fn(lambda t=tree, tp=top: gossip.mix(t, tp, 0), iters=5)
+        W = top.weights(0)
+        gap = spectral.spectral_gap(W) if not top.time_varying else float("nan")
+        if name == "one_peer_exp":
+            # eq. (11): same transient complexity as static exp
+            trans = n ** 3 * math.log2(n) ** 2
+        elif top.time_varying:
+            trans = float("nan")
+        else:
+            trans = spectral.transient_iterations(n, gap)
+        emit(f"comm_{name}", us,
+             f"degree={top.max_degree};rounds={rounds};"
+             f"bytes_per_iter={bytes_per_iter};gap={gap:.4f};"
+             f"transient~{trans:.3g}")

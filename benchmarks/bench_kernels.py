@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks (interpret mode on CPU => correctness-grade timing;
+derived column reports allclose vs oracle and achieved GFLOP/s of the ref)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.gossip_mix import ops as gm_ops, ref as gm_ref
+from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+from .common import emit, time_fn
+
+
+def run() -> None:
+    k = jax.random.key(0)
+    # flash attention
+    B, S, H, Kv, D = 1, 512, 4, 2, 64
+    q = jax.random.normal(jax.random.fold_in(k, 1), (B, S, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (B, S, Kv, D))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (B, S, Kv, D))
+    got = fa_ops.flash_attention(q, kk, v, interpret=True)
+    want = fa_ref.attention_ref(q, kk, v)
+    ok = bool(np.allclose(got, want, rtol=2e-4, atol=2e-4))
+    us_ref = time_fn(jax.jit(lambda a, b, c: fa_ref.attention_ref(a, b, c)),
+                     q, kk, v, iters=5)
+    flops = 4 * B * H * S * S * D / 2  # causal
+    emit("kernel_flash_attention", us_ref,
+         f"allclose={ok};ref_gflops={flops / us_ref / 1e3:.1f};"
+         f"shape=B{B}S{S}H{H}D{D}")
+
+    # ssd scan
+    b, s, h, p, g, n = 1, 512, 4, 64, 1, 64
+    x = jax.random.normal(jax.random.fold_in(k, 4), (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 5), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 6), (h,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(k, 7), (b, s, g, n))
+    Cm = jax.random.normal(jax.random.fold_in(k, 8), (b, s, g, n))
+    y, hT = ssd_ops.ssd_scan(x, dt, A, Bm, Cm, chunk=128, interpret=True)
+    y_ref, h_ref = ssd_ref.ssd_ref(x, dt, A, Bm, Cm)
+    ok = bool(np.allclose(y, y_ref, rtol=2e-3, atol=2e-3))
+    us_ref = time_fn(jax.jit(
+        lambda *a: ssd_ref.ssd_ref(*a)), x, dt, A, Bm, Cm, iters=3)
+    emit("kernel_ssd_scan", us_ref, f"allclose={ok};shape=b{b}s{s}h{h}p{p}n{n}")
+
+    # gossip mix
+    xg = jax.random.normal(jax.random.fold_in(k, 9), (1 << 20,))
+    rg = [jax.random.normal(jax.random.fold_in(k, 10), (1 << 20,))]
+    got = gm_ops.gossip_mix(xg, rg, w_self=0.5, ws=(0.5,), interpret=True)
+    want = gm_ref.gossip_mix_ref(xg, rg, 0.5, (0.5,))
+    ok = bool(np.allclose(got, want, rtol=1e-5, atol=1e-5))
+    us_ref = time_fn(jax.jit(
+        lambda a, b: gm_ref.gossip_mix_ref(a, [b], 0.5, (0.5,))),
+        xg, rg[0], iters=5)
+    gbps = 3 * 4 * xg.size / us_ref / 1e3
+    emit("kernel_gossip_mix", us_ref, f"allclose={ok};ref_GBps={gbps:.1f}")

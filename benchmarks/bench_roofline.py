@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (one row per arch x shape x mesh).
+
+Reads results/dryrun/*.json produced by repro.launch.dryrun, adds
+MODEL_FLOPS = 6 N D (6 N_active D for MoE) per chip and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste), and reports the
+dominant roofline term.  Derived column is the roofline summary; us_per_call
+is the projected step time = max of the three terms (the roofline bound).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.steps import SHAPES
+from .common import emit
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+# active-over-total parameter fraction for the MoE archs (top_k/n_experts on
+# expert weights); computed from the configs.
+_MOE_ACTIVE = {"granite-moe-3b-a800m": (40, 8), "dbrx-132b": (16, 4)}
+
+
+def _active_params(arch: str, n_params: int) -> int:
+    if arch not in _MOE_ACTIVE:
+        return n_params
+    from repro import configs
+    import jax
+    from repro.models import model as M
+    cfg = configs.get_config(arch)
+    shapes = jax.eval_shape(lambda: M.init(cfg, jax.random.key(0)))
+    layers = shapes["layers"]
+    expert = sum(int(layers["moe"][k].size)
+                 for k in ("w_gate", "w_up", "w_down"))
+    E, topk = _MOE_ACTIVE[arch]
+    return n_params - expert * (E - topk) // E
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    info = SHAPES[rec["shape"]]
+    tokens = info["global_batch"] * (1 if info["kind"] == "decode"
+                                     else info["seq"])
+    n_active = _active_params(rec["arch"], rec["n_params"])
+    n_chips = 512 if rec["multi_pod"] else 256
+    factor = 6.0 if rec["kind"] == "train" else 2.0
+    return factor * n_active * tokens / n_chips
+
+
+def run(pattern: str = "*.json") -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS, pattern)))
+    if not files:
+        emit("roofline_missing", 0.0, f"no dryrun artifacts under {RESULTS}")
+        return
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        r = rec["roofline"]
+        mf = model_flops_per_chip(rec)
+        ratio = mf / max(rec["hlo_cost"]["flops"], 1.0)
+        bound_us = 1e6 * max(r["compute_s"], r["memory_s"], r["collective_s"])
+        tag = "2pod" if rec["multi_pod"] else "1pod"
+        emit(f"roofline_{rec['arch']}_{rec['shape']}_{tag}", bound_us,
+             f"compute_ms={1e3 * r['compute_s']:.2f};"
+             f"memory_ms={1e3 * r['memory_s']:.2f};"
+             f"collective_ms={1e3 * r['collective_s']:.2f};"
+             f"dominant={r['dominant']};"
+             f"useful_flops_ratio={ratio:.3f};"
+             f"temp_GB={rec['memory_analysis']['temp_bytes'] / 1e9:.2f}")

@@ -1,0 +1,90 @@
+"""Paper Fig. 1 / Fig. 13 (App. D.5): transient iterations of DmSGD by
+topology on distributed logistic regression, n = 32.
+
+Derived: steps needed by each topology to first reach 1.5x the parallel-SGD
+MSE at the same step budget ("transient iterations" proxy), and final MSE.
+Expected ordering (Table 1): exp graphs ~ parallel << grid << ring.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import optim, topology
+from .common import emit
+
+
+def _problem(n, d, M, seed=0):
+    rng = np.random.default_rng(seed)
+    h = rng.normal(0, np.sqrt(10), size=(n, M, d)).astype(np.float32)
+    y = np.empty((n, M), np.float32)
+    for i in range(n):
+        x_star = rng.standard_normal(d)
+        x_star /= np.linalg.norm(x_star)
+        p = 1 / (1 + np.exp(-h[i] @ x_star))
+        y[i] = np.where(rng.random(M) <= p, 1.0, -1.0)
+    X, Y = h.reshape(-1, d), y.reshape(-1)
+    w = np.zeros(d)
+    for _ in range(100):
+        z = X @ w * Y
+        s = 1 / (1 + np.exp(z))
+        g = -(X * (Y * s)[:, None]).mean(0)
+        H = (X.T * (s * (1 - s))) @ X / len(Y) + 1e-9 * np.eye(d)
+        w -= np.linalg.solve(H, g)
+    return jnp.asarray(h), jnp.asarray(y), jnp.asarray(w)
+
+
+def _grads(h, y, xs, key, batch=8):
+    idx = jax.random.randint(key, (h.shape[0], batch), 0, h.shape[1])
+    hb = jnp.take_along_axis(h, idx[:, :, None], axis=1)
+    yb = jnp.take_along_axis(y, idx, axis=1)
+    z = jnp.einsum("nbd,nd->nb", hb, xs) * yb
+    return -jnp.einsum("nb,nbd->nd", yb * jax.nn.sigmoid(-z), hb) / batch
+
+
+def run(n: int = 32, T: int = 1500) -> None:
+    h, y, x_star = _problem(n, d=10, M=1000)
+    curves = {}
+    t0 = time.perf_counter()
+    for topname in ["parallel", "one_peer_exp", "static_exp", "grid", "ring"]:
+        opt = (optim.parallel_msgd(n, beta=0.8) if topname == "parallel" else
+               optim.make_optimizer("dmsgd",
+                                    topology.get_topology(topname, n),
+                                    beta=0.8))
+        params = {"x": jnp.zeros((n, 10))}
+        state = opt.init(params)
+        key = jax.random.key(1)
+        mses = []
+        for k in range(T):
+            key, sub = jax.random.split(key)
+            g = {"x": _grads(h, y, params["x"], sub)}
+            lr = 0.2 * (0.5 ** (k // 600))
+            params, state = opt.update(params, state, g, k, lr)
+            if k % 25 == 0:
+                mses.append(float(jnp.mean(
+                    jnp.sum((params["x"] - x_star) ** 2, -1))))
+        curves[topname] = mses
+    us = 1e6 * (time.perf_counter() - t0) / len(curves)
+
+    # transient-phase penalty: area between each topology's MSE curve and
+    # the parallel-SGD curve (log-domain, clipped at 0).  A topology with a
+    # long transient phase accumulates a large area (Fig. 1's shaded gap).
+    import math as _m
+    par = curves["parallel"]
+
+    def area(c):
+        return sum(max(0.0, _m.log(m) - _m.log(p)) for m, p in zip(c, par))
+
+    finals = {t: c[-1] for t, c in curves.items()}
+    areas = {t: area(c) for t, c in curves.items()}
+    order_ok = (areas["one_peer_exp"] < areas["grid"] < areas["ring"]
+                and areas["static_exp"] < areas["ring"]
+                and finals["one_peer_exp"] < finals["ring"])
+    emit("transient_fig13", us,
+         ";".join(f"{t}_area={areas[t]:.2f}" for t in curves)
+         + f";exp<grid<ring={order_ok}")
+    emit("transient_final_mse", us,
+         ";".join(f"{t}={finals[t]:.3e}" for t in curves))

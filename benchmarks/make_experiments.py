@@ -1,0 +1,94 @@
+"""Regenerate the machine-derived sections of EXPERIMENTS.md from
+results/dryrun artifacts: §Dry-run (compile matrix + memory) and
+§Roofline (terms table).  Hand-authored sections are left alone; this prints
+markdown to stdout — redirect into the file sections as needed.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.launch.steps import SHAPES
+from .bench_roofline import model_flops_per_chip
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+ARCHS = ["mamba2-1.3b", "granite-34b", "musicgen-large", "gemma2-27b",
+         "llama-3.2-vision-90b", "zamba2-1.2b", "qwen3-0.6b",
+         "granite-moe-3b-a800m", "deepseek-67b", "dbrx-132b"]
+
+
+def load(pattern="dryrun_*.json"):
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        base = os.path.basename(path)[len("dryrun_"):-len(".json")]
+        # skip knob/topology variants: exactly arch_shape_tag
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("knobs") or rec.get("topology") != "one_peer_exp":
+            continue
+        recs[(rec["arch"], rec["shape"], rec["multi_pod"])] = rec
+    return recs
+
+
+def dryrun_section(recs) -> str:
+    out = ["### Compile matrix (baseline: one-peer exp, DmSGD, per-arch "
+           "layouts)", "",
+           "| arch | shape | mesh | nodesxfsdpxmodel | compile s | "
+           "temp GB/chip | args GB/chip | collectives (counts) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mp in (False, True):
+                r = recs.get((arch, shape, mp))
+                if not r:
+                    continue
+                mem = r["memory_analysis"]
+                cc = r["hlo_cost"]["collective_counts"]
+                cstr = " ".join(f"{k.replace('collective-', '')}:{int(v)}"
+                                for k, v in sorted(cc.items()))
+                out.append(
+                    f"| {arch} | {shape} | {'2pod' if mp else '1pod'} "
+                    f"| {r['nodes']}x{r['fsdp']}x{r['model_axis']} "
+                    f"| {r['compile_s']} "
+                    f"| {mem['temp_bytes'] / 1e9:.2f} "
+                    f"| {mem['argument_bytes'] / 1e9:.2f} "
+                    f"| {cstr} |")
+    return "\n".join(out)
+
+
+def roofline_section(recs) -> str:
+    out = ["| arch | shape | mesh | compute ms | memory ms | collective ms |"
+           " dominant | MODEL_FLOPS/HLO_FLOPs |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mp in (False, True):
+                r = recs.get((arch, shape, mp))
+                if not r:
+                    continue
+                rf = r["roofline"]
+                ratio = model_flops_per_chip(r) / max(
+                    r["hlo_cost"]["flops"], 1.0)
+                out.append(
+                    f"| {arch} | {shape} | {'2pod' if mp else '1pod'} "
+                    f"| {1e3 * rf['compute_s']:.2f} "
+                    f"| {1e3 * rf['memory_s']:.2f} "
+                    f"| {1e3 * rf['collective_s']:.2f} "
+                    f"| **{rf['dominant']}** | {ratio:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print(dryrun_section(recs))
+        print()
+    if which in ("all", "roofline"):
+        print(roofline_section(recs))
+
+
+if __name__ == "__main__":
+    main()

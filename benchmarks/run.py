@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure (+ kernels/roofline).
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  bench_spectral_gap  Fig. 3 / Table 5  (Proposition 1)
+  bench_consensus     Fig. 4 / 10 / 11  (Lemma 1, Remarks 4-5)
+  bench_transient     Fig. 1 / Fig. 13  (transient iterations by topology)
+  bench_hetero        eq. 3 / 4         (b^2 heterogeneity vs topology)
+  bench_comm          Table 1 / 7 / 8   (per-iteration communication)
+  bench_kernels       Pallas kernels vs oracles
+  bench_roofline      dry-run roofline terms per (arch x shape x mesh)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_comm, bench_consensus, bench_hetero, bench_kernels,
+               bench_roofline, bench_spectral_gap, bench_transient)
+
+SUITES = {
+    "spectral_gap": bench_spectral_gap.run,
+    "consensus": bench_consensus.run,
+    "transient": bench_transient.run,
+    "hetero": bench_hetero.run,
+    "comm": bench_comm.run,
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            SUITES[name]()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

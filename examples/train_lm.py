@@ -1,0 +1,117 @@
+"""End-to-end driver: train a ~100M-param decoder LM with decentralized
+momentum SGD over the one-peer exponential graph for a few hundred steps.
+
+This is the quantitative one: it runs BOTH one-peer and static exponential
+graphs (+ optionally parallel SGD) with identical data/seed and reports the
+loss curves side by side -- the Remark 7 claim (one-peer converges like
+static) at LM scale.
+
+CPU note: ~100M params x few hundred steps is hours on CPU; default scales
+down to ~artifact size (--preset small, ~10M) while --preset 100m gives the
+full-size run for real hardware.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --preset small --steps 200
+"""
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optim, schedule, topology
+from repro.data import SyntheticLM
+from repro.launch import steps as steps_mod
+from repro.models import model as M
+from repro.models.model import ModelConfig
+
+PRESETS = {
+    # ~10M params: CPU-friendly
+    "small": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                  head_dim=64, d_ff=1024, vocab_size=8192),
+    # ~35M
+    "medium": dict(n_layers=8, d_model=384, n_heads=6, n_kv_heads=2,
+                   head_dim=64, d_ff=1536, vocab_size=16384),
+    # ~110M params (GPT-2-small class): a few hundred steps on real HW
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32768),
+}
+
+
+def make_cfg(preset: str) -> ModelConfig:
+    return ModelConfig(name=f"lm-{preset}", family="dense",
+                       qk_norm=True, tie_embeddings=True, remat=False,
+                       **PRESETS[preset])
+
+
+def train_one(cfg, topname, *, nodes, steps, batch, seq, lr0, hetero, seed):
+    top = (topology.full_averaging(nodes) if topname == "parallel"
+           else topology.get_topology(topname, nodes))
+    opt = (optim.parallel_msgd(nodes) if topname == "parallel"
+           else optim.dmsgd(top, beta=0.9))
+    params = M.init(cfg, jax.random.key(seed))
+    stacked = jax.tree.map(lambda p: jnp.broadcast_to(p, (nodes,) + p.shape),
+                           params)
+    state = opt.init(stacked)
+    step_fn = steps_mod.make_train_step(cfg, opt)
+    period = top.period if top.period < 64 else 1
+    jitted = [jax.jit(lambda p, s, b, lr, k=k: step_fn(k, p, s, b, lr))
+              for k in range(period)]
+    data = SyntheticLM(cfg.vocab_size, nodes, hetero=hetero, seed=seed)
+    lr_fn = schedule.warmup_step_decay(lr0, max(steps // 20, 1),
+                                       [int(steps * 0.7)])
+    curve = []
+    t0 = time.time()
+    for k in range(steps):
+        bt = {"tokens": jnp.asarray(data.sample(k, batch, seq))}
+        stacked, state, loss = jitted[k % period](stacked, state, bt,
+                                                  lr_fn(k))
+        if k % 10 == 0 or k == steps - 1:
+            curve.append((k, float(loss)))
+            print(f"  [{topname}] step {k:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+    return curve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--hetero", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--with-parallel", action="store_true")
+    ap.add_argument("--out", default="results/train_lm.json")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.preset)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda: M.init(cfg, jax.random.key(0)))))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  nodes={args.nodes}")
+
+    tops = ["one_peer_exp", "static_exp"] + (
+        ["parallel"] if args.with_parallel else [])
+    results = {}
+    for t in tops:
+        print(f"== training with {t} ==")
+        results[t] = train_one(cfg, t, nodes=args.nodes, steps=args.steps,
+                               batch=args.batch, seq=args.seq, lr0=args.lr,
+                               hetero=args.hetero, seed=args.seed)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"params_M": n_params / 1e6, "curves": results,
+                   "args": vars(args)}, f, indent=1)
+    print(f"\nwrote {args.out}")
+    print("final losses:", {t: c[-1][1] for t, c in results.items()})
+    op, se = results["one_peer_exp"][-1][1], results["static_exp"][-1][1]
+    print(f"one-peer vs static final-loss gap: {abs(op - se):.4f} "
+          "(Remark 7: should be small)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — Exponential-Graph Decentralized Training (NeurIPS 2021) in JAX.
+
+Subpackages: core (topology/gossip/optimizers — the paper's contribution),
+models (10-arch decoder zoo), kernels (Pallas TPU), configs, launch
+(mesh/dryrun/train/serve), data, checkpoint.
+"""

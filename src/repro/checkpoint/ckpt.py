@@ -1,0 +1,77 @@
+"""Minimal pytree checkpointing (npz payload + json manifest).
+
+Path layout: <dir>/step_<N>/{manifest.json, arrays.npz}.  Atomic via
+write-to-tmp + rename.  Works for stacked decentralized params (the node
+axis is just a leading dim) and optimizer state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _to_numpy(x):
+    """npz-safe array: non-native dtypes (bfloat16, fp8) stored as byte views."""
+    a = np.asarray(x)
+    if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+        return a.view(np.uint8), str(a.dtype)
+    try:
+        np.dtype(a.dtype.name)
+        return a, str(a.dtype)
+    except TypeError:
+        return a.view(np.uint8), str(a.dtype)
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    leaves, treedef = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {}
+    dtypes = []
+    for i, x in enumerate(leaves):
+        arr, dt = _to_numpy(x)
+        arrays[f"leaf_{i}"] = arr
+        dtypes.append(dt)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "treedef": str(treedef), "dtypes": dtypes}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree):
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    _, treedef = _flatten(like_tree)
+    ref_leaves = jax.tree_util.tree_leaves(like_tree)
+    assert len(leaves) == len(ref_leaves), "checkpoint/tree leaf mismatch"
+    import jax.numpy as jnp
+    out = []
+    for a, r in zip(leaves, ref_leaves):
+        if a.dtype == np.uint8 and r.dtype != np.uint8:
+            a = a.view(r.dtype) if hasattr(a, "view") else a
+        out.append(jnp.asarray(a).astype(r.dtype).reshape(r.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)

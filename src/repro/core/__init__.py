@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — exponential-graph decentralized training.
+
+Subsystems: topology (weight matrices), spectral (Prop. 1 analysis), gossip
+(partial averaging → collective-permute), optim (DmSGD & variants, Alg. 1),
+schedule (lr protocol).
+"""
+from . import gossip, optim, schedule, spectral, topology  # noqa: F401
+from .optim import make_optimizer  # noqa: F401
+from .topology import Topology, get_topology  # noqa: F401

@@ -1,0 +1,243 @@
+"""Decentralized (momentum) SGD optimizers over a stacked node axis.
+
+Implements, as pure functional transforms over pytrees whose leaves carry a
+leading node axis of size ``n``:
+
+* ``dmsgd``        -- Algorithm 1 (Yu-Jin-Yang variant [64] used by the paper):
+                        m^{k+1} = W^{(k)} (beta m^k + g^k)
+                        x^{k+1} = W^{(k)} (x^k - gamma m^k)
+                      NOTE: both mixings share W^{(k)}, so the production path
+                      fuses them into ONE gossip round over the concatenated
+                      (beta m + g, x - gamma m) payload.
+* ``dsgd``         -- DmSGD with beta = 0 (Remark 8).
+* ``vanilla_dmsgd``-- [3]: momentum is NOT exchanged:
+                        m^{k+1} = beta m^k + g^k
+                        x^{k+1} = W^{(k)} (x^k - gamma m^{k+1})
+* ``qg_dmsgd``     -- quasi-global momentum [32] (Lin et al. 2021):
+                        x^{k+1} = W^{(k)} (x^k - gamma (g^k + mu m^k))
+                        m^{k+1} = mu m^k + (1 - mu) (x^k - x^{k+1}) / gamma
+                      (EMA of the quasi-global displacement; no momentum
+                      gossip -- the buffer tracks the *averaged* trajectory).
+* ``parallel_msgd``-- global averaging baseline (W = (1/n)11^T every step,
+                      realized with a mean over the node axis == all-reduce).
+
+All satisfy: applying the optimizer with ``full_averaging`` topology makes
+every node's iterate equal to parallel momentum SGD on the averaged gradient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gossip
+from .topology import Topology, full_averaging
+
+PyTree = Any
+
+__all__ = [
+    "OptState",
+    "DecentralizedOptimizer",
+    "dmsgd",
+    "dsgd",
+    "vanilla_dmsgd",
+    "qg_dmsgd",
+    "parallel_msgd",
+    "make_optimizer",
+    "OPTIMIZERS",
+]
+
+
+class OptState(NamedTuple):
+    momentum: PyTree   # same structure/shape as params (leading node axis)
+    count: jax.Array   # scalar int32 step counter
+
+
+@dataclasses.dataclass(frozen=True)
+class DecentralizedOptimizer:
+    """(init_fn, update_fn) pair.
+
+    ``update(params, state, grads, step, lr)`` returns (new_params, new_state).
+    ``step`` must be a *static* Python int when the topology is time-varying
+    and the sparse gossip path is desired (the launcher compiles one step
+    function per phase of the topology period); pass ``traced_step=True`` at
+    construction to use the lax.switch path with a traced step instead.
+    """
+
+    name: str
+    topology: Topology
+    beta: float
+    init: Callable[[PyTree], OptState]
+    update: Callable[..., tuple[PyTree, OptState]]
+
+
+def _zeros_like_tree(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=_mom_dtype(p)), params)
+
+
+_MOMENTUM_DTYPE: dict[str, Any] = {"dtype": None}
+
+
+def _mom_dtype(p):
+    return _MOMENTUM_DTYPE["dtype"] or p.dtype
+
+
+def set_momentum_dtype(dtype) -> None:
+    """Global knob: store momentum in e.g. bf16 (used for dbrx-132b HBM fit)."""
+    _MOMENTUM_DTYPE["dtype"] = dtype
+
+
+def _mix(tree: PyTree, topology: Topology, step, traced: bool,
+         compression: str | None = None) -> PyTree:
+    if traced:
+        return gossip.mix_switch(tree, topology, step)
+    return gossip.mix(tree, topology, int(step), compression)
+
+
+def dmsgd(topology: Topology, beta: float = 0.9,
+          traced_step: bool = False,
+          warmup_allreduce_steps: int = 0,
+          compression: str | None = None) -> DecentralizedOptimizer:
+    """Algorithm 1 (paper's DmSGD).
+
+    warmup_allreduce_steps: Corollary 3's warm-up — use exact global
+    averaging (W = (1/n)11^T) for the first tau-ish steps so the initial
+    consensus residue sum_{k<tau} ||x - x_bar||^2 vanishes from the bound.
+    Static-step path only (the launcher compiles per-phase functions).
+    """
+
+    def init(params: PyTree) -> OptState:
+        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
+
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+        m, x = state.momentum, params
+        # Fused single gossip round: mix (beta m + g) and (x - gamma m)
+        # with the same W^{(k)}.
+        pre_m = jax.tree.map(
+            lambda mi, gi: (beta * mi.astype(jnp.float32)
+                            + gi.astype(jnp.float32)), m, grads)
+        pre_x = jax.tree.map(
+            lambda xi, mi: xi.astype(jnp.float32) - lr * mi.astype(jnp.float32),
+            x, m)
+        top_k = topology
+        if (warmup_allreduce_steps and not traced_step
+                and int(step) < warmup_allreduce_steps):
+            top_k = full_averaging(topology.n)
+        mixed_m, mixed_x = _mix((pre_m, pre_x), top_k, step, traced_step,
+                                compression)
+        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), mixed_m, m)
+        new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, x)
+        return new_x, OptState(new_m, state.count + 1)
+
+    return DecentralizedOptimizer("dmsgd", topology, beta, init, update)
+
+
+def dsgd(topology: Topology, traced_step: bool = False) -> DecentralizedOptimizer:
+    """Decentralized SGD = DmSGD with beta = 0 (Remark 8)."""
+    opt = dmsgd(topology, beta=0.0, traced_step=traced_step)
+    return dataclasses.replace(opt, name="dsgd")
+
+
+def vanilla_dmsgd(topology: Topology, beta: float = 0.9,
+                  traced_step: bool = False) -> DecentralizedOptimizer:
+    """Vanilla DmSGD [3]: no momentum exchange."""
+
+    def init(params: PyTree) -> OptState:
+        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
+
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+        new_m = jax.tree.map(
+            lambda mi, gi: beta * mi.astype(jnp.float32) + gi.astype(jnp.float32),
+            state.momentum, grads)
+        pre_x = jax.tree.map(
+            lambda xi, mi: xi.astype(jnp.float32) - lr * mi, params, new_m)
+        mixed_x = _mix(pre_x, topology, step, traced_step)
+        new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, params)
+        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m,
+                             state.momentum)
+        return new_x, OptState(new_m, state.count + 1)
+
+    return DecentralizedOptimizer("vanilla_dmsgd", topology, beta, init, update)
+
+
+def qg_dmsgd(topology: Topology, beta: float = 0.9,
+             traced_step: bool = False) -> DecentralizedOptimizer:
+    """QG-DmSGD [32]: quasi-global momentum tracks the averaged trajectory."""
+
+    def init(params: PyTree) -> OptState:
+        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
+
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+        m = state.momentum
+        pre_x = jax.tree.map(
+            lambda xi, gi, mi: xi.astype(jnp.float32)
+            - lr * (gi.astype(jnp.float32) + beta * mi.astype(jnp.float32)),
+            params, grads, m)
+        mixed_x = _mix(pre_x, topology, step, traced_step)
+        # quasi-global momentum: m <- beta m + (1-beta) (x^k - x^{k+1}) / lr
+        new_m = jax.tree.map(
+            lambda mi, xi, xn: (beta * mi.astype(jnp.float32)
+                                + (1.0 - beta)
+                                * (xi.astype(jnp.float32) - xn) / lr),
+            m, params, mixed_x)
+        new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, params)
+        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m, m)
+        return new_x, OptState(new_m, state.count + 1)
+
+    return DecentralizedOptimizer("qg_dmsgd", topology, beta, init, update)
+
+
+def parallel_msgd(n: int, beta: float = 0.9) -> DecentralizedOptimizer:
+    """Parallel momentum SGD: exact global averaging of gradients every step
+    (the All-Reduce baseline).  Realized as a mean over the node axis, which
+    GSPMD lowers to all-reduce when the axis is sharded.
+
+    Uses the paper's averaged-recursion convention (eqs. 50-51):
+      x^{k+1} = x^k - gamma m^k   (OLD momentum),
+      m^{k+1} = beta m^k + g_avg^k
+    so DmSGD with W = (1/n)11^T reproduces it iterate-for-iterate."""
+
+    top = full_averaging(n)
+
+    def init(params: PyTree) -> OptState:
+        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
+
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+        g_avg = jax.tree.map(
+            lambda g: jnp.broadcast_to(
+                jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True), g.shape),
+            grads)
+        new_x = jax.tree.map(
+            lambda xi, mi: (xi.astype(jnp.float32)
+                            - lr * mi.astype(jnp.float32)).astype(xi.dtype),
+            params, state.momentum)
+        new_m = jax.tree.map(
+            lambda mi, gi: beta * mi.astype(jnp.float32) + gi,
+            state.momentum, g_avg)
+        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m,
+                             state.momentum)
+        return new_x, OptState(new_m, state.count + 1)
+
+    return DecentralizedOptimizer("parallel_msgd", top, beta, init, update)
+
+
+OPTIMIZERS = {
+    "dmsgd": dmsgd,
+    "dsgd": dsgd,
+    "vanilla_dmsgd": vanilla_dmsgd,
+    "qg_dmsgd": qg_dmsgd,
+}
+
+
+def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
+                   traced_step: bool = False) -> DecentralizedOptimizer:
+    if name == "parallel_msgd":
+        return parallel_msgd(topology.n, beta=beta)
+    if name == "dsgd":
+        return dsgd(topology, traced_step=traced_step)
+    if name not in OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}")
+    return OPTIMIZERS[name](topology, beta=beta, traced_step=traced_step)

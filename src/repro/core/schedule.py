@@ -1,0 +1,41 @@
+"""Learning-rate schedules (the paper's training protocol, Sec. 6.1/6.2).
+
+Warmup over the first ``warmup_steps`` then step decay by ``decay_factor`` at
+each milestone -- the [21] ImageNet-in-1h protocol the paper follows, plus the
+linear scaling rule.  Also the theory-side rate gamma = sqrt(n (1-beta)^3 / T)
+from Corollary 1 / Theorem 1.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_step_decay", "theory_lr", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_step_decay(base_lr: float, warmup_steps: int,
+                      milestones: Sequence[int], decay_factor: float = 0.1,
+                      scale: float = 1.0):
+    """Linear warmup then piecewise-constant decay. ``scale`` implements the
+    linear scaling rule (scale = n for n nodes)."""
+    peak = base_lr * scale
+    ms = jnp.asarray(sorted(milestones), jnp.int32)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+        n_decays = jnp.sum(step >= ms.astype(jnp.float32))
+        return warm * (decay_factor ** n_decays)
+
+    return fn
+
+
+def theory_lr(n: int, T: int, beta: float = 0.9) -> float:
+    """gamma = sqrt(n (1-beta)^3) / sqrt(T)  (Corollary 1 / Theorem 1)."""
+    return math.sqrt(n * (1 - beta) ** 3) / math.sqrt(max(T, 1))

@@ -1,0 +1,384 @@
+"""Network topologies and weight matrices for decentralized training.
+
+Implements every topology compared in the paper (Tables 1/5/7/8, Appendix
+A.3.1): ring, star, 2D-grid, 2D-torus, 1/2-random graph, bipartite random
+match, hypercube, static exponential (eq. 5), one-peer exponential (eq. 7,
+with cyclic / random-permutation / uniform-sampling schedules), and the full
+(parallel-SGD) graph.
+
+Conventions follow the paper: ``w_ij`` scales information flowing from node
+``j`` to node ``i``; every ``W`` is doubly stochastic (Assumption A.4).
+Static undirected graphs use the Metropolis(-Hastings) rule [43, eq. (8)].
+
+Matrices are returned as ``numpy`` float64 arrays (they are tiny, n x n) and
+converted to jnp where consumed.  Time-varying topologies expose both the
+dense matrix per step (reference path) and the *neighbor schedule* consumed by
+the ppermute production path in :mod:`repro.core.gossip`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "one_peer_hypercube",
+    "ring",
+    "star",
+    "grid_2d",
+    "torus_2d",
+    "half_random",
+    "bipartite_random_match",
+    "hypercube",
+    "static_exponential",
+    "one_peer_exponential",
+    "full_averaging",
+    "get_topology",
+    "TOPOLOGIES",
+]
+
+
+def _metropolis(adj: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings weights for an undirected adjacency (no self loops).
+
+    w_ij = 1 / (1 + max(deg_i, deg_j)) for edges, w_ii = 1 - sum_j w_ij.
+    Produces a symmetric doubly-stochastic matrix.
+    """
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    W = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    return W
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A (possibly time-varying) gossip topology over ``n`` nodes.
+
+    Attributes:
+      name: identifier.
+      n: number of nodes.
+      period: number of distinct matrices before the schedule repeats
+        (1 for static topologies).
+      max_degree: maximum number of *out-neighbors excluding self* of any node
+        in one realization -- the paper's per-iteration communication measure.
+      weights_fn: step -> dense (n, n) weight matrix W^(k).
+      neighbor_schedule: step -> (self_weight, [(shift, recv_weight), ...]),
+        or None when the realization is not a circulant structure expressible
+        via ppermute shifts.  Semantics:
+          x_i^{+} = self_weight * x_i + sum_d recv_weight_d * x_{(i - shift_d) mod n}
+        i.e. every node *sends* its buffer by +shift_d; shifts are what
+        jax.lax.ppermute consumes on the node mesh axis.
+    """
+
+    name: str
+    n: int
+    period: int
+    max_degree: int
+    weights_fn: Callable[[int], np.ndarray]
+    neighbor_schedule: (
+        Callable[[int], tuple[float, list[tuple[int, float]]]] | None
+    ) = None
+    time_varying: bool = False
+
+    def weights(self, step: int = 0) -> np.ndarray:
+        return self.weights_fn(step % self.period if self.period > 0 else 0)
+
+    def all_weights(self) -> list[np.ndarray]:
+        return [self.weights(k) for k in range(self.period)]
+
+    def iter_weights(self) -> Iterator[np.ndarray]:
+        k = 0
+        while True:
+            yield self.weights(k)
+            k += 1
+
+
+# ---------------------------------------------------------------------------
+# Static topologies
+# ---------------------------------------------------------------------------
+
+def ring(n: int) -> Topology:
+    """Undirected ring; Metropolis weights. 1-rho = O(1/n^2)."""
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[i, (i - 1) % n] = True
+    if n <= 2:  # degenerate: fully connected
+        adj = ~np.eye(n, dtype=bool)
+    W = _metropolis(adj)
+    # ring is a circulant: shifts +-1 with equal weights (n>=3, uniform degree)
+    w_off = W[0, 1]
+    sched = None
+    if n >= 3:
+        sched = lambda k: (1.0 - 2 * w_off, [(1, w_off), (-1, w_off)])
+    return Topology("ring", n, 1, 2 if n >= 3 else max(n - 1, 0), lambda k: W,
+                    neighbor_schedule=sched)
+
+
+def star(n: int) -> Topology:
+    """Undirected star (node 0 is the hub); Metropolis weights."""
+    adj = np.zeros((n, n), dtype=bool)
+    adj[0, 1:] = adj[1:, 0] = True
+    W = _metropolis(adj)
+    return Topology("star", n, 1, n - 1, lambda k: W)
+
+
+def _grid_dims(n: int) -> tuple[int, int]:
+    r = int(math.floor(math.sqrt(n)))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+def grid_2d(n: int) -> Topology:
+    """Undirected 2D grid (no wraparound); Metropolis weights."""
+    r, c = _grid_dims(n)
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(r):
+        for j in range(c):
+            u = i * c + j
+            if i + 1 < r:
+                adj[u, (i + 1) * c + j] = adj[(i + 1) * c + j, u] = True
+            if j + 1 < c:
+                adj[u, i * c + j + 1] = adj[i * c + j + 1, u] = True
+    W = _metropolis(adj)
+    return Topology("grid", n, 1, 4, lambda k: W)
+
+
+def torus_2d(n: int) -> Topology:
+    """Undirected 2D torus (wraparound grid); Metropolis weights."""
+    r, c = _grid_dims(n)
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(r):
+        for j in range(c):
+            u = i * c + j
+            for v in (((i + 1) % r) * c + j, i * c + (j + 1) % c):
+                if v != u:
+                    adj[u, v] = adj[v, u] = True
+    W = _metropolis(adj)
+    return Topology("torus", n, 1, 4, lambda k: W)
+
+
+def half_random(n: int, seed: int = 0) -> Topology:
+    """1/2-random graph (App. A.3.1): each edge iid with p=1/2, W = A'/d_max.
+
+    Following the appendix, W = A/d_max with A the adjacency *including* the
+    diagonal completion so rows sum to one: we place the leftover mass on the
+    diagonal (equivalent to lazy walk), keeping W doubly stochastic.
+    """
+    rng = np.random.default_rng(seed)
+    adj = np.triu(rng.random((n, n)) < 0.5, k=1)
+    adj = adj | adj.T
+    d_max = max(int(adj.sum(axis=1).max()), 1)
+    W = adj.astype(np.float64) / d_max
+    np.fill_diagonal(W, 1.0 - W.sum(axis=1))
+    deg = int(adj.sum(axis=1).max())
+    return Topology("half_random", n, 1, deg, lambda k: W)
+
+
+def hypercube(n: int) -> Topology:
+    """Hypercube graph (Remark 2): requires n = 2^tau; symmetric, weights
+    1/(1+log2 n) on each of the log2(n) bit-flip neighbors."""
+    tau = int(round(math.log2(n)))
+    if 2 ** tau != n:
+        raise ValueError(f"hypercube requires n to be a power of 2, got {n}")
+    W = np.zeros((n, n), dtype=np.float64)
+    w = 1.0 / (tau + 1)
+    for i in range(n):
+        W[i, i] = w
+        for t in range(tau):
+            W[i, i ^ (1 << t)] = w
+    return Topology("hypercube", n, 1, tau, lambda k: W)
+
+
+def static_exponential(n: int) -> Topology:
+    """Static exponential graph, eq. (5).
+
+    Node i receives from nodes j with log2(mod(j - i, n)) integer, i.e. from
+    i + 2^t (mod n), t = 0..ceil(log2 n)-1, each with weight 1/(tau+1).
+    Directed, circulant, doubly stochastic. 1-rho = 2/(1+ceil(log2 n)) for
+    even n (Proposition 1).
+    """
+    if n == 1:
+        W1 = np.ones((1, 1))
+        return Topology("static_exp", 1, 1, 0, lambda k: W1)
+    tau = int(math.ceil(math.log2(n)))
+    offsets = sorted({(2 ** t) % n for t in range(tau)} - {0})
+    w = 1.0 / (len(offsets) + 1)
+    W = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        W[i, i] = w
+        for off in offsets:
+            W[i, (i + off) % n] += w
+    def weights_fn(k: int, W=W) -> np.ndarray:
+        return W
+
+    def schedule(k: int) -> tuple[float, list[tuple[int, float]]]:
+        # node i sends to (i + s) mod n <=> node i receives from (i - s).
+        # W[i, i+off] = w means i receives from i+off => shift s = -off.
+        return (w, [(-off, w) for off in offsets])
+
+    return Topology("static_exp", n, 1, len(offsets), weights_fn,
+                    neighbor_schedule=schedule)
+
+
+# ---------------------------------------------------------------------------
+# Time-varying topologies
+# ---------------------------------------------------------------------------
+
+def one_peer_exponential(
+    n: int, schedule: str = "cyclic", seed: int = 0
+) -> Topology:
+    """One-peer exponential graph, eq. (7).
+
+    W^{(k)}_{ij} = 1/2 if log2(mod(j - i, n)) == mod(k, tau), 1/2 if i == j.
+    ``schedule`` selects the order the tau realizations are visited:
+      - "cyclic": k -> mod(k, tau)              (paper main body; Lemma 1)
+      - "random_perm": without-replacement shuffles per period (Remark 5: still
+        exactly averages each period)
+      - "uniform": with replacement (Remark 5 / App. B.3.2: exact averaging
+        only asymptotically)
+    """
+    if n == 1:
+        W1 = np.ones((1, 1))
+        return Topology("one_peer_exp", 1, 1, 0, lambda k: W1)
+    tau = int(math.ceil(math.log2(n)))
+    mats = []
+    for t in range(tau):
+        off = (2 ** t) % n
+        W = np.zeros((n, n), dtype=np.float64)
+        for i in range(n):
+            W[i, i] += 0.5
+            W[i, (i + off) % n] += 0.5
+        mats.append(W)
+
+    if schedule == "cyclic":
+        order_fn = lambda k: k % tau  # noqa: E731
+        period = tau
+        time_varying = True
+    elif schedule == "random_perm":
+        rng = np.random.default_rng(seed)
+        # Deterministic pseudo-random permutation stream (reproducible).
+        perms: list[np.ndarray] = []
+
+        def order_fn(k: int) -> int:
+            p = k // tau
+            while len(perms) <= p:
+                perms.append(rng.permutation(tau))
+            return int(perms[p][k % tau])
+
+        period = tau
+        time_varying = True
+    elif schedule == "uniform":
+        rng = np.random.default_rng(seed)
+        draws: list[int] = []
+
+        def order_fn(k: int) -> int:
+            while len(draws) <= k:
+                draws.append(int(rng.integers(tau)))
+            return draws[k]
+
+        period = tau
+        time_varying = True
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    def weights_fn(k: int) -> np.ndarray:
+        return mats[order_fn(k)]
+
+    def sched(k: int) -> tuple[float, list[tuple[int, float]]]:
+        t = order_fn(k)
+        off = (2 ** t) % n
+        return (0.5, [(-off, 0.5)])
+
+    name = "one_peer_exp" if schedule == "cyclic" else f"one_peer_exp_{schedule}"
+    top = Topology(name, n, period, 1, weights_fn, neighbor_schedule=sched,
+                   time_varying=time_varying)
+    # NB: weights() applies mod(period); for random schedules order_fn already
+    # consumes the raw step, so bypass the mod by storing period accordingly.
+    if schedule != "cyclic":
+        top = dataclasses.replace(top, period=1 << 30)
+    return top
+
+
+def one_peer_hypercube(n: int) -> Topology:
+    """One-peer hypercube (Remark 6, [54]): at step k each node pairs with
+    its bit-flip neighbor i ^ 2^{mod(k, tau)} and they average.  Undirected
+    and SYMMETRIC (unlike the one-peer exponential graph), requires n = 2^tau.
+    Also achieves exact averaging after tau steps."""
+    tau = int(round(math.log2(n)))
+    if 2 ** tau != n:
+        raise ValueError(f"one_peer_hypercube requires n=2^tau, got {n}")
+    mats = []
+    for t in range(tau):
+        W = np.zeros((n, n), dtype=np.float64)
+        for i in range(n):
+            W[i, i] = 0.5
+            W[i, i ^ (1 << t)] = 0.5
+        mats.append(W)
+
+    def weights_fn(k: int) -> np.ndarray:
+        return mats[k % tau]
+
+    # pairing i <-> i ^ 2^t is NOT a uniform circulant shift, so there is no
+    # single-shift schedule; the production path uses the dense route (or a
+    # masked pair of shifts). Kept dense for clarity.
+    return Topology("one_peer_hypercube", n, tau, 1, weights_fn,
+                    time_varying=True)
+
+
+def bipartite_random_match(n: int, seed: int = 0) -> Topology:
+    """Bipartite random match graph (App. A.3.1): random perfect matching per
+    step; matched pairs average (w=1/2 each). Requires even n."""
+    if n % 2:
+        raise ValueError("bipartite_random_match requires even n")
+    rng = np.random.default_rng(seed)
+    mats: list[np.ndarray] = []
+
+    def weights_fn(k: int) -> np.ndarray:
+        while len(mats) <= k:
+            perm = rng.permutation(n)
+            W = np.zeros((n, n), dtype=np.float64)
+            for j in range(n // 2):
+                a, b = perm[2 * j], perm[2 * j + 1]
+                W[a, a] = W[b, b] = 0.5
+                W[a, b] = W[b, a] = 0.5
+            mats.append(W)
+        return mats[k]
+
+    return Topology("random_match", n, 1 << 30, 1, weights_fn,
+                    time_varying=True)
+
+
+def full_averaging(n: int) -> Topology:
+    """Complete graph with uniform weights: W = (1/n) 1 1^T (parallel SGD)."""
+    W = np.full((n, n), 1.0 / n)
+    return Topology("full", n, 1, n - 1, lambda k: W)
+
+
+TOPOLOGIES: dict[str, Callable[..., Topology]] = {
+    "ring": ring,
+    "star": star,
+    "grid": grid_2d,
+    "torus": torus_2d,
+    "half_random": half_random,
+    "hypercube": hypercube,
+    "static_exp": static_exponential,
+    "one_peer_exp": one_peer_exponential,
+    "one_peer_hypercube": one_peer_hypercube,
+    "random_match": bipartite_random_match,
+    "full": full_averaging,
+}
+
+
+def get_topology(name: str, n: int, **kw) -> Topology:
+    if name not in TOPOLOGIES:
+        raise KeyError(f"unknown topology {name!r}; options: {sorted(TOPOLOGIES)}")
+    return TOPOLOGIES[name](n, **kw)

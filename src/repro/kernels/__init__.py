@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+The paper's contribution is topology-level (no kernels of its own); these
+cover the model zoo's hot spots + the gossip mixing pass:
+
+  flash_attention/  online-softmax attention (GQA, window, softcap)
+  ssd_scan/         Mamba-2 chunked SSD recurrence
+  gossip_mix/       fused weighted averaging after the gossip ppermute
+
+Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+ref.py (pure-jnp oracle); validated with interpret=True on CPU.
+"""

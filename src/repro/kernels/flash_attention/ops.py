@@ -1,0 +1,68 @@
+"""jit'd wrapper for the flash-attention Pallas kernel.
+
+Handles GQA head plumbing (queries grouped per kv head), block padding, and
+dtype management.  ``interpret`` defaults to True off-TPU so the kernel body
+runs (and is tested) on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "attn_cap", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    attn_cap: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: (B, S, H, D); k, v: (B, T, Kv, D) -> (B, S, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+
+    bq = min(block_q, _next_mult(S))
+    bk = min(block_k, _next_mult(T))
+    S_pad = -(-S // bq) * bq
+    T_pad = -(-T // bk) * bk
+
+    # (B, S, H, D) -> (B * Kv * G, S, D): group queries by their kv head
+    qg = q.reshape(B, S, Kv, G, D).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(B * Kv * G, S, D)
+    kg = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * Kv, T, D), G, axis=0)
+    vg = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * Kv, T, D), G, axis=0)
+
+    if S_pad != S:
+        qg = jnp.pad(qg, ((0, 0), (0, S_pad - S), (0, 0)))
+    if T_pad != T:
+        kg = jnp.pad(kg, ((0, 0), (0, T_pad - T), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, T_pad - T), (0, 0)))
+        # padded kv columns must not contribute: rely on causal mask when
+        # causal (pad cols are > any valid row), else mask via window trick
+        assert causal or T_pad == T, "non-causal padding unsupported"
+
+    out = K.flash_attention_kernel(
+        qg, kg, vg, causal=causal, window=window, attn_cap=attn_cap,
+        block_q=bq, block_k=bk, interpret=interpret)
+    out = out[:, :S]
+    out = out.reshape(B, Kv, G, S, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, S, H, D)
+
+
+def _next_mult(n: int, base: int = 128) -> int:
+    """Largest power-of-two block <= n when n < base (tiny test shapes)."""
+    if n >= base:
+        return base
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p

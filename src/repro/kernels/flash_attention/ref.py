@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Semantics: causal GQA attention with optional sliding window and logit
+soft-capping, matching repro.models.attention._sdpa with positions = arange.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  attn_cap: float | None = None):
+    """q: (B, S, H, D); k, v: (B, T, Kv, D). Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    logits *= D ** -0.5
+    if attn_cap is not None:
+        logits = attn_cap * jnp.tanh(logits / attn_cap)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

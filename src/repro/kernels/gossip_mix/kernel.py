@@ -1,0 +1,50 @@
+"""Gossip-mix Pallas TPU kernel: fused weighted averaging of the local buffer
+with received neighbor buffers (the compute half of neighbor_allreduce).
+
+After the ppermute delivers neighbor shards, the mixing
+  out = w_self * x + sum_d w_d * recv_d
+is a pure-bandwidth elementwise pass over every parameter/momentum byte.
+Fusing all (1 + degree) reads and the f32 upcast into one VMEM-tiled kernel
+keeps it a single HBM sweep (XLA would otherwise materialize the f32
+intermediates for mixed-dtype buffers).  Tiles are (8, 1024) f32 = 32 KiB --
+a lane-aligned VPU shape; the grid walks the flattened buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 8
+TILE_COLS = 1024
+
+
+def _mix_kernel(*refs, w_self: float, ws: tuple):
+    x_ref = refs[0]
+    recv_refs = refs[1:-1]
+    o_ref = refs[-1]
+    acc = w_self * x_ref[...].astype(jnp.float32)
+    for w, r in zip(ws, recv_refs):
+        acc += w * r[...].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def gossip_mix_kernel(x, recvs, w_self: float, ws: tuple,
+                      interpret: bool = False):
+    """x, recvs[i]: (R, C) same shape/dtype (flattened+padded by ops.py)."""
+    R, C = x.shape
+    tr, tc = min(TILE_ROWS, R), min(TILE_COLS, C)
+    assert R % tr == 0 and C % tc == 0
+    grid = (R // tr, C // tc)
+    spec = pl.BlockSpec((tr, tc), lambda i, j: (i, j))
+    kernel = functools.partial(_mix_kernel, w_self=w_self, ws=tuple(ws))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * (1 + len(recvs)),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, *recvs)

@@ -1,0 +1,14 @@
+"""Oracle for the gossip-mix kernel: weighted axpy over flat buffers.
+
+out = w_self * x + sum_d w_d * recv_d   (f32 accumulation, cast to x.dtype)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(x, recvs, w_self: float, ws):
+    acc = w_self * x.astype(jnp.float32)
+    for r, w in zip(recvs, ws):
+        acc = acc + w * r.astype(jnp.float32)
+    return acc.astype(x.dtype)

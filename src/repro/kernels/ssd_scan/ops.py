@@ -1,0 +1,42 @@
+"""jit'd wrapper for the SSD-scan Pallas kernel: head plumbing + layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Kernel-backed SSD. Same signature/semantics as
+    repro.models.mamba2.ssd_chunked:
+    x (b,s,h,p); dt (b,s,h); A (h,); B,C (b,s,g,n) ->
+    (y (b,s,h,p), h_final (b,h,p,n))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+
+    xk = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtk = dt.transpose(0, 2, 1).reshape(b * h, s, 1)
+    dAk = (dt * A[None, None]).transpose(0, 2, 1).reshape(b * h, s, 1)
+    Bk = jnp.repeat(B.transpose(0, 2, 1, 3), rep, axis=1).reshape(b * h, s, n)
+    Ck = jnp.repeat(C.transpose(0, 2, 1, 3), rep, axis=1).reshape(b * h, s, n)
+
+    ck = min(chunk, s)
+    while s % ck:
+        ck //= 2
+    y, hT = K.ssd_scan_kernel(xk, dtk, dAk, Bk, Ck, chunk=ck,
+                              interpret=interpret)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    hF = hT.reshape(b, h, n, p).transpose(0, 1, 3, 2)  # (b,h,p,n)
+    return y, hF

@@ -1,0 +1,36 @@
+"""Oracle for the SSD scan: naive per-timestep recurrence (exact semantics).
+
+h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t h_t
+
+Deliberately independent of the chunked algorithm in repro.models.mamba2 so
+it validates BOTH the Pallas kernel and the model's chunked path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, h0=None):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,g,n).
+    Returns (y (b,s,h,p), h_final (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        xt, dtt, Bt, Ct = inp      # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * A[None])           # (b,h)
+        new = (carry * decay[:, :, None, None]
+               + jnp.einsum("bhn,bhp,bh->bhpn", Bt, xt, dtt))
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, new)
+        return new, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), hT

@@ -1,0 +1,487 @@
+"""Post-SPMD HLO cost model for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` visits while-loop bodies ONCE (verified
+empirically on this backend), so a 95-layer scanned model reports ~1 layer of
+FLOPs.  This module parses ``compiled.as_text()`` and walks the computation
+graph (entry -> fusions/calls/whiles/conditionals) multiplying by while trip
+counts, producing:
+
+  * flops            -- dot/convolution dominated; elementwise 1/elem
+  * hbm_bytes        -- instruction output traffic heuristic
+  * collective_bytes -- per-op-kind bytes-over-links (per participant):
+                          collective-permute: 1x shard bytes
+                          all-reduce:         2(g-1)/g x shard bytes
+                          all-gather:         (g-1)/g x output bytes
+                          reduce-scatter:     (g-1) x output-shard bytes
+                          all-to-all:         (g-1)/g x shard bytes
+
+Trip counts come from the while condition's comparison constant (all our
+scans lower to simple counter-vs-constant conditions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr(line: str):
+    """Parse '%name = <shape> op(...)' robustly.
+
+    Tuple shapes may contain '/*index=N*/' comments (with '=') and nested
+    parens, so the shape is extracted by paren matching, not regex."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple shape: find matching close paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        shape_str, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_str, rest = rest[:sp], rest[sp:]
+    mo = _OP_RE.match(rest)
+    if not mo:
+        return None
+    return m.group(1), shape_str, mo.group(1)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "tanh",
+    "exponential", "exponential-minus-one", "log", "rsqrt", "sqrt", "negate",
+    "abs", "power", "select", "compare", "and", "or", "xor", "convert",
+    "floor", "ceil", "sine", "cosine", "logistic", "clamp", "remainder",
+    "sign", "atan2", "not",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "collective-permute", "all-to-all")
+_SKIP = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "iota", "after-all", "partition-id", "replica-id", "rng",
+         "rng-bit-generator", "custom-call", "infeed", "outfeed"}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems, bts = 0, 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bts += n * _DTYPE_BYTES[dt]
+    return elems, bts
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_collective_bytes(self) -> float:
+        # hop-weighted permute bytes are an ALTERNATIVE accounting of the
+        # same traffic (DESIGN §3 ICI note), not additional traffic.
+        return float(sum(v for k, v in self.collective_bytes.items()
+                         if k != "permute_hopweighted"))
+
+    def add(self, other: "HloCost", k: float = 1.0) -> None:
+        self.flops += other.flops * k
+        self.hbm_bytes += other.hbm_bytes * k
+        for kk, v in other.collective_bytes.items():
+            self.collective_bytes[kk] += v * k
+        for kk, v in other.collective_counts.items():
+            self.collective_counts[kk] += v * k
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+        }
+
+
+def _split_computations(text: str) -> tuple[dict[str, list[str]], str]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        stripped = line.strip()
+        if depth <= 0:
+            cur = None
+            continue
+        if stripped and stripped != "}":
+            comps[cur].append(stripped)
+    if entry is None and comps:
+        entry = next(reversed(comps))
+    return comps, entry
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    best = 1
+    for line in cond_lines:
+        if "constant(" in line:
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _operands(line: str) -> list[str]:
+    """Names of operands of an instruction call (top-level args only)."""
+    start = line.index("(")
+    depth = 0
+    out, cur = [], []
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+            if ch == "," and depth == 1:
+                out.append("".join(cur[:-1]).strip())
+                cur = []
+    if cur:
+        out.append("".join(cur).strip())
+    return [re.sub(r"^%", "", o.split()[-1]) if o else o for o in out]
+
+
+class _Analyzer:
+    def __init__(self, comps: dict[str, list[str]], default_group: int):
+        self.comps = comps
+        self.default_group = default_group
+        self.memo: dict[str, HloCost] = {}
+        self.symbols: dict[str, dict[str, str]] = {}
+
+    def symtab(self, comp: str) -> dict[str, str]:
+        if comp not in self.symbols:
+            tab = {}
+            for line in self.comps.get(comp, ()):
+                m = _parse_instr(line)
+                if m:
+                    tab[m[0]] = m[1]
+            self.symbols[comp] = tab
+        return self.symbols[comp]
+
+    def _operand_bytes(self, comp: str, line: str) -> float:
+        """Sum of operand sizes (HBM reads) looked up in the symbol table."""
+        try:
+            ops = _operands(line)
+        except ValueError:
+            return 0.0
+        tab = self.symtab(comp)
+        total = 0.0
+        for o in ops:
+            if o in tab:
+                total += _shape_elems_bytes(tab[o])[1]
+        return total
+
+    def _fusion_hbm(self, comp: str, line: str, called: str,
+                    out_bts: int) -> float:
+        """HBM traffic of a fusion: slice-aware reads + update-sized writes.
+
+        A fusion whose parameter is only consumed through dynamic-slice reads
+        only the slice (e.g. per-layer weight picked from a scan-stacked
+        buffer); a fusion rooted in dynamic-update-slice writes only the
+        update extent (in-place aliased scan-carry accumulation)."""
+        lines = self.comps.get(called, ())
+        tab = self.symtab(called)
+        # alias resolution through bitcast/copy/reshape
+        alias: dict[str, str] = {}
+        for ln in lines:
+            m = _parse_instr(ln)
+            if m and m[2] in ("bitcast", "copy", "reshape"):
+                ops_ = _operands(ln)
+                if ops_:
+                    alias[m[0]] = ops_[0]
+
+        def root_of(nm: str) -> str:
+            seen = set()
+            while nm in alias and nm not in seen:
+                seen.add(nm)
+                nm = alias[nm]
+            return nm
+
+        params: dict[str, int] = {}
+        sliced_reads: dict[str, float] = {}
+        full_use: set[str] = set()
+        for ln in lines:
+            m = _parse_instr(ln)
+            if not m:
+                continue
+            nm, shp, op = m
+            if op == "parameter":
+                params[nm] = _shape_elems_bytes(shp)[1]
+                continue
+            if op in ("bitcast", "copy", "reshape"):
+                continue
+            ops_ = [root_of(o) for o in _operands(ln) if o]
+            if op == "dynamic-slice":
+                for o in ops_[:1]:          # sliced operand
+                    if o in params:
+                        sliced_reads[o] = (sliced_reads.get(o, 0.0)
+                                           + _shape_elems_bytes(shp)[1])
+                for o in ops_[1:]:
+                    if o in params:
+                        full_use.add(o)      # indices (tiny)
+                continue
+            if op == "dynamic-update-slice":
+                # reads: the update operand (+ slice-sized RMW of the buffer)
+                if len(ops_) > 1 and ops_[0] in params:
+                    upd = (_shape_elems_bytes(tab[_operands(ln)[1]])[1]
+                           if _operands(ln)[1] in tab else 0)
+                    sliced_reads[ops_[0]] = (sliced_reads.get(ops_[0], 0.0)
+                                             + upd)
+                for o in ops_[1:]:
+                    if o in params:
+                        full_use.add(o)
+                continue
+            for o in ops_:
+                if o in params:
+                    full_use.add(o)
+        reads = 0.0
+        for nm, full in params.items():
+            if nm in full_use:
+                reads += full
+            elif nm in sliced_reads:
+                reads += min(sliced_reads[nm], full)
+            # un-referenced params cost nothing
+        # writes: DUS-rooted fusions write the update extent only
+        writes = float(out_bts)
+        for ln in lines:
+            if "ROOT" in ln:
+                m = _parse_instr(ln)
+                if m:
+                    rt = m[2]
+                    if rt in ("bitcast", "copy", "reshape"):
+                        rt_src = root_of(m[0])
+                        # find the defining op of the root source
+                        src_line = next(
+                            (l2 for l2 in lines
+                             if _parse_instr(l2)
+                             and _parse_instr(l2)[0] == rt_src), None)
+                        if src_line:
+                            rt = _parse_instr(src_line)[2]
+                            ln = src_line
+                    if rt == "dynamic-update-slice":
+                        ops_ = _operands(ln)
+                        if len(ops_) > 1 and ops_[1] in tab:
+                            writes = float(
+                                _shape_elems_bytes(tab[ops_[1]])[1])
+                break
+        return reads + writes
+
+    def dot_flops(self, comp: str, line: str, result_elems: int) -> float:
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        ops = _operands(line)
+        tab = self.symtab(comp)
+        if m is None or not ops or ops[0] not in tab:
+            return 2.0 * result_elems
+        shapes = _SHAPE_RE.findall(tab[ops[0]])
+        if not shapes:
+            return 2.0 * result_elems
+        dims = ([int(d) for d in shapes[0][1].split(",")]
+                if shapes[0][1] else [])
+        k = 1
+        for ci in (int(c) for c in m.group(1).split(",") if c):
+            if ci < len(dims):
+                k *= dims[ci]
+        return 2.0 * result_elems * k
+
+    def conv_flops(self, comp: str, line: str, result_elems: int) -> float:
+        ops = _operands(line)
+        tab = self.symtab(comp)
+        if len(ops) >= 2 and ops[1] in tab:
+            shapes = _SHAPE_RE.findall(tab[ops[1]])
+            if shapes:
+                k = 1
+                for d in (shapes[0][1].split(",") if shapes[0][1] else []):
+                    k *= int(d)
+                return 2.0 * result_elems * k
+        return 2.0 * result_elems
+
+    def analyze(self, name: str) -> HloCost:
+        if name in self.memo:
+            return self.memo[name]
+        self.memo[name] = HloCost()  # cycle guard
+        cost = HloCost()
+        for line in self.comps.get(name, ()):
+            m = _parse_instr(line)
+            if not m:
+                continue
+            _, shape_str, op = m
+            base_op = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue
+            elems, bts = _shape_elems_bytes(shape_str)
+            if base_op in _COLLECTIVES:
+                g = _group_size(line, self.default_group)
+                g = max(g, 1)
+                if base_op == "collective-permute":
+                    link = float(bts)
+                    # hop-weighted model: on a physical ring/torus a shift of
+                    # d is min(|d|, n-|d|) links; exponential-graph hops 2^t
+                    # pay multi-hop routing (DESIGN §3 ICI note).
+                    mpairs = re.search(r"source_target_pairs=\{(.*?)\}\}",
+                                       line)
+                    if mpairs:
+                        pairs = re.findall(r"\{(\d+),(\d+)\}",
+                                           mpairs.group(0))
+                        if pairs:
+                            nn = len(pairs)
+                            hops = [min((int(b) - int(a)) % nn,
+                                        (int(a) - int(b)) % nn)
+                                    for a, b in pairs]
+                            hop = max(1, max(hops))
+                            cost.collective_bytes["permute_hopweighted"] += (
+                                float(bts) * hop)
+                elif base_op == "all-reduce":
+                    link = 2.0 * (g - 1) / g * bts
+                elif base_op == "all-gather":
+                    link = (g - 1) / g * bts
+                elif base_op == "reduce-scatter":
+                    link = float((g - 1) * bts)
+                else:
+                    link = (g - 1) / g * bts
+                cost.collective_bytes[base_op] += link
+                cost.collective_counts[base_op] += 1
+                cost.hbm_bytes += 2.0 * bts
+                continue
+            if base_op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                trips = (_trip_count(self.comps.get(mc.group(1), []))
+                         if mc else 1)
+                if mb:
+                    cost.add(self.analyze(mb.group(1)), k=max(trips, 1))
+                continue
+            if base_op in ("fusion", "call", "async-start"):
+                mcalls = re.search(
+                    r"(?:calls|to_apply|called_computations)="
+                    r"\{?%?([\w.\-]+)", line)
+                if mcalls:
+                    called = mcalls.group(1)
+                    sub = self.analyze(called)
+                    # fused internals live in registers/VMEM: take the
+                    # FLOPs and collectives but NOT the nested HBM bytes --
+                    # the fusion's HBM traffic is its touched extents.
+                    cost.flops += sub.flops
+                    for kk, v in sub.collective_bytes.items():
+                        cost.collective_bytes[kk] += v
+                    for kk, v in sub.collective_counts.items():
+                        cost.collective_counts[kk] += v
+                    cost.hbm_bytes += self._fusion_hbm(name, line, called,
+                                                       bts)
+                else:
+                    cost.hbm_bytes += bts + self._operand_bytes(name, line)
+                continue
+            if base_op == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{|true_computation=|"
+                    r"false_computation=)%?\{?%?([\w.\-]+)", line)
+                extra = re.findall(r"%([\w.\-]+)(?=[,}])",
+                                   line[line.find("branch_computations"):]
+                                   ) if "branch_computations" in line else []
+                names = list(dict.fromkeys(branches + extra))
+                subs = [self.analyze(b) for b in names if b in self.comps]
+                if subs:  # average across branches (switch-based gossip)
+                    for s in subs:
+                        cost.add(s, k=1.0 / len(subs))
+                continue
+            if base_op == "dot":
+                cost.flops += self.dot_flops(name, line, elems)
+                cost.hbm_bytes += bts + self._operand_bytes(name, line)
+                continue
+            if base_op == "convolution":
+                cost.flops += self.conv_flops(name, line, elems)
+                cost.hbm_bytes += bts + self._operand_bytes(name, line)
+                continue
+            if base_op in _ELEMENTWISE:
+                cost.flops += float(elems)
+                cost.hbm_bytes += bts + self._operand_bytes(name, line)
+                continue
+            if base_op in ("reduce", "reduce-window"):
+                cost.flops += float(elems) * 4.0
+                cost.hbm_bytes += bts + self._operand_bytes(name, line)
+                continue
+            if base_op in _SKIP:
+                continue
+            if base_op == "dynamic-update-slice":
+                # aliased in-place: traffic = read+write of the UPDATE slice,
+                # not the full (possibly layer-stacked scan-carry) buffer.
+                ops_ = _operands(line)
+                tab = self.symtab(name)
+                upd = (_shape_elems_bytes(tab[ops_[1]])[1]
+                       if len(ops_) > 1 and ops_[1] in tab else bts)
+                cost.hbm_bytes += 2.0 * min(upd, bts)
+                continue
+            if base_op in ("dynamic-slice", "slice", "copy", "transpose",
+                           "reshape", "broadcast", "reverse", "gather",
+                           "concatenate", "scatter", "select-and-scatter",
+                           "pad", "sort"):
+                # data movement: read+write of the RESULT extent
+                cost.hbm_bytes += 2.0 * bts
+                continue
+            cost.hbm_bytes += bts + self._operand_bytes(name, line)
+        self.memo[name] = cost
+        return cost
+
+
+def analyze_hlo(text: str, default_group: int = 1) -> HloCost:
+    comps, entry = _split_computations(text)
+    return _Analyzer(comps, default_group).analyze(entry)

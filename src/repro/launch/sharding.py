@@ -1,0 +1,210 @@
+"""Sharding rules mapping parameter/activation pytrees onto the logical mesh
+("node", "fsdp", "model").
+
+Megatron-style tensor-parallel rules per parameter name with divisibility
+guards and a generic fallback; training params carry a leading ``node`` axis
+(decentralized replicas), serving params do not (and are sharded over
+('fsdp','model') for storage).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+__all__ = ["param_specs", "batch_spec", "cache_specs", "named", "axis_size"]
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+# Trailing-dims rules per leaf name: tuples of preferred axes per dim,
+# tried in order with divisibility checks. "R" = replicate.
+_TRAILING_RULES: dict[str, tuple] = {
+    # attention
+    "wq": ("fsdp", "model"),
+    "wk": ("fsdp", "model"),
+    "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    # mlp
+    "w_gate": ("fsdp", "model"),
+    "w_up": ("fsdp", "model"),
+    "w_down": ("model", "fsdp"),
+    # mamba2
+    "in_proj": ("fsdp", "model"),
+    "out_proj": ("model", "fsdp"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    # embeddings / heads handled specially below
+}
+
+_MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _spec_for_leaf(path: tuple, leaf, mesh: Mesh, *, node_axis: bool) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1]
+    shape = leaf.shape
+    sizes = {a: axis_size(mesh, a) for a in ("fsdp", "model")}
+    lead = 1 if node_axis else 0          # node axis
+    # stacked layer/group axes between node axis and the parameter dims
+    # (scan stacking): everything except the trailing `rank` dims.
+
+    def guard(dim_len, ax):
+        return ax if (ax in sizes and _fits(dim_len, sizes[ax])) else None
+
+    # --- special cases ------------------------------------------------------
+    if name == "embed":
+        # (V, d) or (K, V, d) for audio
+        rank = leaf.ndim - lead
+        if rank == 2:
+            spec = (guard(shape[-2], "model"), guard(shape[-1], "fsdp"))
+            if spec[0] is None:  # vocab not divisible: shard d over model
+                spec = (None, guard(shape[-1], "model"))
+        else:
+            spec = (None, guard(shape[-2], "model"), guard(shape[-1], "fsdp"))
+            if spec[1] is None:
+                spec = (None, None, guard(shape[-1], "model"))
+        return _with_lead(spec, leaf, lead)
+    if name == "lm_head":
+        rank = leaf.ndim - lead
+        if rank == 2:
+            spec = (guard(shape[-2], "fsdp"), guard(shape[-1], "model"))
+            if spec[1] is None:
+                spec = (guard(shape[-2], "model"), None)
+        else:
+            spec = (None, guard(shape[-2], "fsdp"), guard(shape[-1], "model"))
+            if spec[2] is None:
+                spec = (None, guard(shape[-2], "model"), None)
+        return _with_lead(spec, leaf, lead)
+    if name in _MOE_LEAVES and leaf.ndim - lead >= 3:
+        # MoE expert-stacked: (..., E, a, b) — expert-parallel over 'model'
+        # when E divides, else TP on the ff dim.
+        E, a, b = shape[-3], shape[-2], shape[-1]
+        if _fits(E, sizes["model"]):
+            spec = ("model", guard(a, "fsdp"), None)
+        elif name == "w_down":   # (E, f, d)
+            spec = (None, guard(a, "model"), guard(b, "fsdp"))
+        else:                    # (E, d, f)
+            spec = (None, guard(a, "fsdp"), guard(b, "model"))
+        return _with_lead(spec, leaf, lead)
+    if name == "router":
+        return _with_lead((None, None), leaf, lead)
+
+    rule = _TRAILING_RULES.get(name)
+    if rule is not None and leaf.ndim - lead >= len(rule):
+        spec = tuple(guard(shape[-len(rule) + i], ax) if ax else None
+                     for i, ax in enumerate(rule))
+        return _with_lead(spec, leaf, lead)
+
+    # --- generic fallback: replicate small, shard biggest divisible dim -----
+    rank = leaf.ndim - lead
+    if rank >= 2 and leaf.size >= 1 << 16:
+        dims = list(range(leaf.ndim - rank, leaf.ndim))
+        order = sorted(dims, key=lambda i: -shape[i])
+        spec = [None] * rank
+        used = []
+        for ax in ("model", "fsdp"):
+            for i in order:
+                si = i - (leaf.ndim - rank)
+                if spec[si] is None and _fits(shape[i], sizes[ax]) \
+                        and si not in used:
+                    spec[si] = ax
+                    used.append(si)
+                    break
+        return _with_lead(tuple(spec), leaf, lead)
+    return _with_lead((None,) * rank, leaf, lead)
+
+
+def _with_lead(trailing: tuple, leaf, lead: int) -> P:
+    n_stack = leaf.ndim - lead - len(trailing)
+    assert n_stack >= 0, (leaf.shape, trailing)
+    head = (("node",) if lead else ()) + (None,) * n_stack
+    return P(*(head + tuple(trailing)))
+
+
+def param_specs(params: PyTree, mesh: Mesh, *, node_axis: bool = True,
+                fsdp_params: bool = True) -> PyTree:
+    """PartitionSpec tree for a parameter pytree.
+
+    node_axis: training replicas carry a leading node axis.
+    fsdp_params: if False, drop the 'fsdp' axis from specs (pure TP;
+      used as a hillclimb knob)."""
+
+    def one(path, leaf):
+        spec = _spec_for_leaf(path, leaf, mesh, node_axis=node_axis)
+        if not fsdp_params:
+            spec = P(*[None if s == "fsdp" else s for s in spec])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh: Mesh, *, node_axis: bool = True, batch_dim_size: int = 0):
+    """Tokens / labels: (node, batch, ...) or (batch, ...) for serving."""
+    fs = axis_size(mesh, "fsdp")
+    nd = axis_size(mesh, "node")
+    if node_axis:
+        inner = "fsdp" if (batch_dim_size == 0 or _fits(batch_dim_size, fs)) \
+            else None
+        return ("node", inner)
+    # serving: shard batch over node (and fsdp when divisible)
+    if batch_dim_size and _fits(batch_dim_size, nd * fs):
+        return (("node", "fsdp"),)
+    if batch_dim_size and _fits(batch_dim_size, nd):
+        return ("node",)
+    return (None,)
+
+
+def cache_specs(cache: PyTree, mesh: Mesh, batch: int) -> PyTree:
+    """Decode caches: (L, B, heads/..., T, ...) — batch over ('node','fsdp')
+    when divisible, kv-heads (or head_dim fallback) over 'model'."""
+    nd, fs, md = (axis_size(mesh, a) for a in ("node", "fsdp", "model"))
+
+    def bspec():
+        if _fits(batch, nd * fs):
+            return ("node", "fsdp")
+        if _fits(batch, nd):
+            return "node"
+        return None
+
+    def one(path, leaf):
+        shape = leaf.shape
+        # KV caches: (L, B, n_kv, T, hd); conv: (L, B, w, C);
+        # ssm state: (L, B, H, Pdim, N)
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        spec = [None] * leaf.ndim
+        # find batch dim: the dim equal to `batch` right after stack dims
+        try:
+            bdim = next(i for i, s in enumerate(shape) if s == batch and i > 0)
+        except StopIteration:
+            bdim = None
+        if bdim is not None:
+            spec[bdim] = bspec()
+        # model axis: prefer the heads/state dim (index 2: n_kv for KV caches,
+        # H for SSM state), then head_dim, then remaining dims.
+        candidates = [i for i in ([2] + list(range(leaf.ndim - 1, 2, -1)))
+                      if 0 <= i < leaf.ndim]
+        for i in candidates:
+            if i != bdim and spec[i] is None and _fits(shape[i], md) \
+                    and shape[i] >= md:
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def named(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+"""Model substrate: unified decoder stack covering the 10 assigned archs."""
+from .model import (ModelConfig, decode_step, forward, init, init_cache,  # noqa: F401
+                    param_count)

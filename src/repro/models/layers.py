@@ -1,0 +1,70 @@
+"""Shared neural-net layers (pure-functional; params are nested dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "rms_norm_init", "rope", "softcap", "mlp_init", "mlp_apply",
+    "dense_init",
+]
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    """RMSNorm with (1 + scale) parameterization (gemma/llama compatible)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embeddings. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., s, half)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float | None):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(params, x, kind: str = "swiglu"):
+    """Gated MLP: swiglu (silu gate) or geglu (gelu gate, gemma)."""
+    dt = x.dtype
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate, approximate=True)
+    return jnp.einsum("...f,fd->...d", act * up, params["w_down"].astype(dt))

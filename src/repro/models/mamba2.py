@@ -1,0 +1,216 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill (quadratic within chunks + linear recurrence
+across chunks) and O(1)-state single-token decode.  The chunked recurrence is
+the hot spot the ``ssd_scan`` Pallas kernel targets; this module keeps a pure
+jnp path (`impl='jnp'`) as the oracle / CPU path.
+
+Shapes follow the paper: x (B,S,H,P) heads, A (H,) scalar-per-head decay,
+B/C (B,S,G,N) with G groups, dt (B,S,H) softplus-positive step sizes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm, rms_norm_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "SSMCache",
+           "init_ssm_cache", "ssd_chunked"]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim) rolling window of conv inputs
+    state: jax.Array   # (B, H, P, N) ssm state
+
+
+def init_ssm_cache(batch, d_conv, conv_dim, n_heads, head_dim, d_state,
+                   dtype=jnp.float32) -> SSMCache:
+    return SSMCache(
+        jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+    )
+
+
+def mamba2_init(key, d_model: int, *, d_state: int = 128, head_dim: int = 64,
+                expand: int = 2, d_conv: int = 4, n_groups: int = 1,
+                dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj emits [z (d_inner), x (d_inner), B, C (2*G*N), dt (H)]
+        "in_proj": dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * n_groups * d_state + n_heads),
+            dtype=dtype),
+        "conv_w": dense_init(ks[1], (d_conv, conv_dim), scale=d_conv ** -0.5,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": rms_norm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(proj, d_inner, n_groups, d_state, n_heads):
+    gn = n_groups * d_state
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt = proj[..., -n_heads:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, history=None):
+    """Depthwise causal conv1d along seq. xBC: (B,S,C); conv_w: (K,C)."""
+    K = conv_w.shape[0]
+    if history is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = history.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * conv_w[i][None, None]
+              for i in range(K))
+    return jax.nn.silu(out + conv_b[None, None])
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 128, h0=None):
+    """Chunked SSD. x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,g,n).
+
+    Recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y_t = C_t h_t.
+    Returns (y (b,s,h,p), h_final (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    dA = dtc * A[None, None, None]                 # (b,nc,l,h)  (negative)
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+    # intra-chunk (causal "attention" with decay):
+    #   y_t += sum_{u<=t} C_t . B_u  exp(cum_t - cum_u) dt_u x_u
+    Bh = jnp.repeat(Bc, rep, axis=3)               # (b,nc,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcthn,bcuhn->bchtu", Ch, Bh)        # (b,nc,h,l,l)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, None]
+    # mask the exponent BEFORE exp: for u > t, cum_t - cum_u > 0 overflows
+    # and would leak NaN through where() in the backward pass.
+    diff = (cum.transpose(0, 1, 3, 2)[..., :, None]
+            - cum.transpose(0, 1, 3, 2)[..., None, :])
+    decay = jnp.exp(jnp.where(tri, diff, -1e30))
+    M = scores * decay
+    xdt = xc * dtc[..., None]                      # (b,nc,l,h,p)
+    y_intra = jnp.einsum("bchtu,bcuhp->bcthp", M, xdt)
+
+    # chunk-final states: S_c = sum_u exp(cumend - cum_u) dt_u B_u x_u^T
+    cum_end = cum[:, :, -1:, :]                    # (b,nc,1,h)
+    dec_end = jnp.exp(cum_end - cum)               # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclhp,bclh->bchpn", Bh, xc,
+                        dtc * dec_end)             # (b,nc,h,p,n)
+
+    # inter-chunk scan: H_{c} = exp(sum dA_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(cum_end[:, :, 0, :])     # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        s_c, d_c = inp
+        new = carry * d_c[:, :, None, None] + s_c
+        return new, carry  # emit state *entering* the chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), states.dtype)
+    hT, h_in = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)           # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y_t += C_t exp(cum_t) H_in
+    y_inter = jnp.einsum("bcthn,bchpn,bcth->bcthp", Ch, h_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, hT
+
+
+def mamba2_apply(params, x, *, d_state: int = 128, head_dim: int = 64,
+                 expand: int = 2, d_conv: int = 4, n_groups: int = 1,
+                 chunk: int = 128, impl: str = "jnp"):
+    """Full-sequence Mamba2 block. x: (B,S,d_model) -> (B,S,d_model)."""
+    dt_ = x.dtype
+    d_model = x.shape[-1]
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(proj, d_inner, n_groups, d_state, n_heads)
+    xBC = _causal_conv(xBC, params["conv_w"].astype(dt_),
+                       params["conv_b"].astype(dt_))
+    xi = xBC[..., :d_inner]
+    Bv = xBC[..., d_inner:d_inner + n_groups * d_state]
+    Cv = xBC[..., d_inner + n_groups * d_state:]
+
+    b, s = x.shape[:2]
+    xh = xi.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+    Bm = Bv.reshape(b, s, n_groups, d_state).astype(jnp.float32)
+    Cm = Cv.reshape(b, s, n_groups, d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, _ = ssd_ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner).astype(dt_)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
+
+
+def mamba2_decode(params, x, cache: SSMCache, *, d_state: int = 128,
+                  head_dim: int = 64, expand: int = 2, d_conv: int = 4,
+                  n_groups: int = 1):
+    """Single-token decode. x: (B,1,d_model)."""
+    dt_ = x.dtype
+    d_model = x.shape[-1]
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(proj, d_inner, n_groups, d_state, n_heads)
+    new_conv = jnp.concatenate([cache.conv[:, 1:],
+                                xBC[:, 0:1].astype(cache.conv.dtype)], axis=1)
+    xBC = _causal_conv(xBC, params["conv_w"].astype(dt_),
+                       params["conv_b"].astype(dt_), history=cache.conv)
+    xi = xBC[..., :d_inner]
+    Bv = xBC[..., d_inner:d_inner + n_groups * d_state]
+    Cv = xBC[..., d_inner + n_groups * d_state:]
+
+    b = x.shape[0]
+    xh = xi.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    Bm = Bv.reshape(b, n_groups, d_state).astype(jnp.float32)
+    Cm = Cv.reshape(b, n_groups, d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None])      # (b,h)
+    A = -jnp.exp(params["A_log"])
+    rep = n_heads // n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1)                     # (b,h,n)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    decay = jnp.exp(dt * A[None])                        # (b,h)
+    new_state = (cache.state * decay[:, :, None, None]
+                 + jnp.einsum("bhn,bhp,bh->bhpn", Bh, xh, dt))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(dt_)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
+    return out, SSMCache(new_conv, new_state)

@@ -1,0 +1,122 @@
+"""Gossip path equivalence: ppermute/shift path == dense W reference."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip, topology
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_tree(n, seed=0):
+    k = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return {
+        "w": jax.random.normal(k1, (n, 8, 16)),
+        "b": jax.random.normal(k2, (n, 4)),
+        "nested": {"v": jax.random.normal(k3, (n, 3, 5, 2))},
+    }
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("ring", {}),
+    ("static_exp", {}),
+    ("one_peer_exp", {}),
+])
+@pytest.mark.parametrize("n", [4, 6, 8, 16])
+@pytest.mark.parametrize("step", [0, 1, 2, 5])
+def test_shift_path_matches_dense(name, kw, n, step):
+    top = topology.get_topology(name, n, **kw)
+    tree = _rand_tree(n)
+    got = gossip.mix(tree, top, step)
+    W = jnp.asarray(top.weights(step))
+    want = gossip.mix_dense(tree, W)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["star", "grid", "torus", "random_match", "full"])
+def test_dense_path_available_for_all(name, n=8):
+    top = topology.get_topology(name, n)
+    tree = _rand_tree(n)
+    out = gossip.mix(tree, top, 0)
+    # mean over node axis preserved for every leaf
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(a.mean(axis=0), b.mean(axis=0),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_mean_preservation_one_peer(n):
+    """Double stochasticity => gossip preserves the node-average exactly."""
+    top = topology.one_peer_exponential(n)
+    tree = _rand_tree(n, seed=2)
+    for step in range(2 * int(math.log2(n))):
+        out = gossip.mix(tree, top, step)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            np.testing.assert_allclose(a.mean(axis=0), b.mean(axis=0),
+                                       rtol=1e-5, atol=1e-5)
+        tree = out
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_one_peer_period_reaches_consensus(n):
+    """Lemma 1 at the pytree level: after tau mixes all nodes identical."""
+    top = topology.one_peer_exponential(n)
+    tree = _rand_tree(n, seed=3)
+    tau = int(math.log2(n))
+    for step in range(tau):
+        tree = gossip.mix(tree, top, step)
+    for leaf in jax.tree.leaves(tree):
+        avg = leaf.mean(axis=0, keepdims=True)
+        np.testing.assert_allclose(leaf, jnp.broadcast_to(avg, leaf.shape),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mix_switch_matches_static(n=8):
+    top = topology.one_peer_exponential(n)
+    tree = _rand_tree(n, seed=4)
+    f = jax.jit(lambda t, s: gossip.mix_switch(t, top, s))
+    for step in range(6):
+        got = f(tree, jnp.asarray(step))
+        want = gossip.mix(tree, top, step)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_gossip_spec_counts():
+    assert gossip.gossip_spec(topology.one_peer_exponential(16), 0) == {
+        "kind": "ppermute", "rounds": 1, "shifts": [-1]}
+    s = gossip.gossip_spec(topology.static_exponential(16), 0)
+    assert s["kind"] == "ppermute" and s["rounds"] == 4
+    assert gossip.gossip_spec(topology.star(16), 0)["kind"] == "dense"
+
+
+def test_int8_compressed_gossip():
+    """Quantized gossip: payload error bounded by the int8 step; DmSGD with
+    compression still converges on a quadratic (beyond-paper feature)."""
+    n = 8
+    top = topology.one_peer_exponential(n)
+    tree = _rand_tree(n, seed=9)
+    exact = gossip.mix(tree, top, 0)
+    quant = gossip.mix(tree, top, 0, compression="int8")
+    for a, b, x in zip(jax.tree.leaves(quant), jax.tree.leaves(exact),
+                       jax.tree.leaves(tree)):
+        step = float(jnp.max(jnp.abs(x))) / 127.0
+        assert float(jnp.abs(a - b).max()) <= step * 0.51 + 1e-6
+
+    # convergence end-to-end
+    from repro.core import optim
+    from tests.test_optim import _quadratic_problem, _grads
+    A, b2, x_star = _quadratic_problem(n, 5, hetero=0.3)
+    opt = optim.dmsgd(top, beta=0.8, compression="int8")
+    params = {"x": jnp.zeros((n, 5))}
+    state = opt.init(params)
+    for k in range(2000):
+        g = {"x": _grads(A, b2, params["x"])}
+        params, state = opt.update(params, state, g, k, 0.02)
+    err = float(jnp.linalg.norm(params["x"].mean(0) - x_star))
+    assert err < 0.15, err

@@ -1,0 +1,194 @@
+"""Decentralized optimizer semantics and convergence tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optim, topology
+from repro.core.schedule import theory_lr
+
+
+def _quadratic_problem(n, d, seed=0, hetero=1.0):
+    """Per-node quadratic f_i(x) = 0.5 ||A_i x - b_i||^2; global min known."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((n, d, d)) * 0.3 + np.eye(d)
+    b = rng.standard_normal((n, d)) * hetero
+    # global optimum of (1/n) sum 0.5||A_i x - b_i||^2
+    H = np.einsum("nij,nik->jk", A, A) / n
+    g = np.einsum("nij,ni->j", A, b) / n
+    x_star = np.linalg.solve(H, g)
+    return jnp.asarray(A), jnp.asarray(b), jnp.asarray(x_star)
+
+
+def _grads(A, b, xs, key=None, sigma=0.0):
+    """Per-node gradients at per-node iterates xs [n, d] (+ optional noise)."""
+    r = jnp.einsum("nij,nj->ni", A, xs) - b
+    g = jnp.einsum("nij,ni->nj", A, r)
+    if sigma > 0.0 and key is not None:
+        g = g + sigma * jax.random.normal(key, g.shape)
+    return g
+
+
+def _run(opt, A, b, T, lr, sigma=0.0, seed=0, n=None, d=None):
+    n, d = A.shape[0], A.shape[1]
+    params = {"x": jnp.zeros((n, d))}
+    state = opt.init(params)
+    key = jax.random.key(seed)
+    for k in range(T):
+        key, sub = jax.random.split(key)
+        g = {"x": _grads(A, b, params["x"], sub, sigma)}
+        params, state = opt.update(params, state, g, k, lr)
+    return params["x"]
+
+
+@pytest.mark.parametrize("name", ["dmsgd", "dsgd", "vanilla_dmsgd", "qg_dmsgd"])
+@pytest.mark.parametrize("topname", ["one_peer_exp", "static_exp", "ring"])
+def test_convergence_deterministic(name, topname):
+    """All optimizers over all graphs converge to the global optimum on a
+    strongly-convex quadratic with homogeneous-enough conditions."""
+    n, d = 8, 6
+    A, b, x_star = _quadratic_problem(n, d, hetero=0.3)
+    top = topology.get_topology(topname, n)
+    beta = 0.0 if name == "dsgd" else 0.8
+    opt = optim.make_optimizer(name, top, beta=beta)
+    xs = _run(opt, A, b, T=2500, lr=0.02)
+    x_bar = xs.mean(axis=0)
+    assert jnp.linalg.norm(x_bar - x_star) < 1e-1
+    # consensus: nodes agree up to the O(gamma b / (1-rho)) steady-state
+    # neighborhood that constant-step decentralized SGD admits under
+    # heterogeneity (Assumption A.3 / eq. 3 third term).
+    assert jnp.linalg.norm(xs - x_bar[None]) < 3e-1
+
+
+def test_full_topology_equals_parallel_msgd():
+    """DmSGD with W = (1/n)11^T produces identical iterates to parallel mSGD."""
+    n, d = 8, 5
+    A, b, _ = _quadratic_problem(n, d)
+    top_full = topology.full_averaging(n)
+    opt_d = optim.dmsgd(top_full, beta=0.9)
+    opt_p = optim.parallel_msgd(n, beta=0.9)
+
+    params_d = {"x": jnp.zeros((n, d))}
+    params_p = {"x": jnp.zeros((n, d))}
+    st_d, st_p = opt_d.init(params_d), opt_p.init(params_p)
+    for k in range(30):
+        gd = {"x": _grads(A, b, params_d["x"])}
+        gp = {"x": _grads(A, b, params_p["x"])}
+        params_d, st_d = opt_d.update(params_d, st_d, gd, k, 0.03)
+        params_p, st_p = opt_p.update(params_p, st_p, gp, k, 0.03)
+    # After the first full mixing both trajectories coincide: with W=J,
+    # m^{k+1}=J(bm+g)= b m̄+ḡ and x^{k+1}=J(x-γm)=x̄-γm̄ — the parallel update
+    # on the averaged trajectory.
+    np.testing.assert_allclose(params_d["x"], params_p["x"], rtol=1e-4, atol=1e-5)
+
+
+def test_dsgd_is_dmsgd_beta0():
+    n, d = 8, 4
+    A, b, _ = _quadratic_problem(n, d)
+    top = topology.one_peer_exponential(n)
+    o1 = optim.dsgd(top)
+    o2 = optim.dmsgd(top, beta=0.0)
+    p1, p2 = {"x": jnp.zeros((n, d))}, {"x": jnp.zeros((n, d))}
+    s1, s2 = o1.init(p1), o2.init(p2)
+    for k in range(10):
+        g = {"x": _grads(A, b, p1["x"])}
+        p1, s1 = o1.update(p1, s1, g, k, 0.05)
+        g2 = {"x": _grads(A, b, p2["x"])}
+        p2, s2 = o2.update(p2, s2, g2, k, 0.05)
+    np.testing.assert_allclose(p1["x"], p2["x"], rtol=1e-6)
+
+
+def test_algorithm1_manual_recursion():
+    """One DmSGD step == hand-rolled Algorithm 1 (eqs. 46-47)."""
+    n, d = 8, 3
+    rng = np.random.default_rng(0)
+    x0 = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    m0 = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    g0 = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    beta, lr, k = 0.7, 0.1, 2
+    top = topology.one_peer_exponential(n)
+    W = np.asarray(top.weights(k))
+
+    opt = optim.dmsgd(top, beta=beta)
+    state = optim.OptState(momentum={"x": m0}, count=jnp.zeros((), jnp.int32))
+    new_p, new_s = opt.update({"x": x0}, state, {"x": g0}, k, lr)
+
+    want_m = W @ (beta * np.asarray(m0) + np.asarray(g0))
+    want_x = W @ (np.asarray(x0) - lr * np.asarray(m0))
+    np.testing.assert_allclose(new_s.momentum["x"], want_m, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(new_p["x"], want_x, rtol=1e-5, atol=1e-6)
+
+
+def test_one_peer_matches_static_rate_stochastic():
+    """Remark 7 (empirical): one-peer converges to comparable error as static
+    exponential under gradient noise, and both beat ring."""
+    n, d, T = 16, 8, 3000
+    A, b, x_star = _quadratic_problem(n, d, hetero=0.5, seed=1)
+    lr = theory_lr(n, T, beta=0.8) * 2.0
+
+    def final_err(topname):
+        top = topology.get_topology(topname, n)
+        opt = optim.dmsgd(top, beta=0.8)
+        xs = _run(opt, A, b, T=T, lr=lr, sigma=0.5, seed=7)
+        return float(jnp.linalg.norm(xs.mean(axis=0) - x_star))
+
+    e_op = final_err("one_peer_exp")
+    e_se = final_err("static_exp")
+    e_ring = final_err("ring")
+    assert e_op < 2.0 * e_se + 0.05  # same rate, up to noise
+    assert e_op <= e_ring + 0.05
+    assert e_se <= e_ring + 0.05
+
+
+def test_traced_step_path_matches_static_path():
+    n, d = 8, 4
+    A, b, _ = _quadratic_problem(n, d)
+    top = topology.one_peer_exponential(n)
+    o_static = optim.dmsgd(top, beta=0.9)
+    o_traced = optim.dmsgd(top, beta=0.9, traced_step=True)
+
+    p1, p2 = {"x": jnp.zeros((n, d))}, {"x": jnp.zeros((n, d))}
+    s1, s2 = o_static.init(p1), o_traced.init(p2)
+    upd = jax.jit(lambda p, s, g, k: o_traced.update(p, s, g, k, 0.05))
+    for k in range(7):
+        g = {"x": _grads(A, b, p1["x"])}
+        p1, s1 = o_static.update(p1, s1, g, k, 0.05)
+        p2, s2 = upd(p2, s2, g, jnp.asarray(k))
+    np.testing.assert_allclose(p1["x"], p2["x"], rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_dtype_knob():
+    n, d = 4, 3
+    top = topology.one_peer_exponential(n)
+    optim.set_momentum_dtype(jnp.bfloat16)
+    try:
+        opt = optim.dmsgd(top, beta=0.9)
+        p = {"x": jnp.zeros((n, d), jnp.float32)}
+        s = opt.init(p)
+        assert s.momentum["x"].dtype == jnp.bfloat16
+        p2, s2 = opt.update(p, s, {"x": jnp.ones((n, d))}, 0, 0.1)
+        assert s2.momentum["x"].dtype == jnp.bfloat16
+        assert p2["x"].dtype == jnp.float32
+    finally:
+        optim.set_momentum_dtype(None)
+
+
+def test_corollary3_warmup_allreduce():
+    """Corollary 3: with all-reduce warm-up, iterates are exactly consensual
+    through the warm-up phase (sum_{k<tau} ||x - x_bar||^2 == 0)."""
+    n, d = 8, 5
+    A, b, _ = _quadratic_problem(n, d)
+    top = topology.one_peer_exponential(n)
+    opt = optim.dmsgd(top, beta=0.9, warmup_allreduce_steps=3)
+    rng = np.random.default_rng(0)
+    params = {"x": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
+    state = opt.init(params)
+    for k in range(6):
+        g = {"x": _grads(A, b, params["x"])}
+        params, state = opt.update(params, state, g, k, 0.05)
+        dev = float(jnp.abs(params["x"] - params["x"].mean(0)).max())
+        if k < 3:
+            assert dev < 1e-6, (k, dev)   # warm-up: exact consensus
+    assert dev > 1e-6                      # gossip phase: inexact again

@@ -1,0 +1,171 @@
+"""Data pipeline, checkpoint, schedule, steps and hlo_cost unit tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, configs
+from repro.core import optim, schedule, topology
+from repro.data import SyntheticLM
+from repro.launch import steps as steps_mod
+from repro.launch.hlo_cost import analyze_hlo
+from repro.models import model as M
+
+
+# --- data -------------------------------------------------------------------
+
+def test_data_deterministic():
+    d = SyntheticLM(vocab_size=128, n_nodes=4, hetero=0.5, seed=3)
+    a = d.sample(7, 2, 16)
+    b = d.sample(7, 2, 16)
+    np.testing.assert_array_equal(a, b)
+    c = d.sample(8, 2, 16)
+    assert not np.array_equal(a, c)
+    assert a.shape == (4, 2, 16) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < 128
+
+
+def test_data_heterogeneity_knob():
+    """hetero=0 => all nodes share one distribution; hetero=1 => distinct."""
+    hom = SyntheticLM(64, 4, hetero=0.0, seed=0)
+    het = SyntheticLM(64, 4, hetero=1.0, seed=0)
+
+    def node_hist_dist(arr):
+        hists = [np.bincount(arr[i].ravel(), minlength=64) / arr[i].size
+                 for i in range(arr.shape[0])]
+        return max(np.abs(hists[i] - hists[j]).sum()
+                   for i in range(4) for j in range(4))
+
+    a = hom.sample(0, 16, 64)
+    b = het.sample(0, 16, 64)
+    assert node_hist_dist(b) > node_hist_dist(a)
+
+
+def test_data_codebooks():
+    d = SyntheticLM(32, 2, seed=0)
+    a = d.sample(0, 2, 8, n_codebooks=4)
+    assert a.shape == (2, 2, 8, 4)
+
+
+# --- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 10, tree)
+    checkpoint.save(d, 20, jax.tree.map(lambda x: x * 2, tree))
+    assert checkpoint.latest_step(d) == 20
+    out = checkpoint.restore(d, 20, tree)
+    for a, b in zip(jax.tree.leaves(out),
+                    jax.tree.leaves(jax.tree.map(lambda x: x * 2, tree))):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(a.astype(np.float32),
+                                   b.astype(np.float32))
+
+
+# --- schedule -----------------------------------------------------------------
+
+def test_warmup_step_decay():
+    fn = schedule.warmup_step_decay(0.1, 10, [100, 200], scale=2.0)
+    assert float(fn(0)) == pytest.approx(0.02)     # 0.2 * 1/10
+    assert float(fn(9)) == pytest.approx(0.2)
+    assert float(fn(50)) == pytest.approx(0.2)
+    assert float(fn(150)) == pytest.approx(0.02)
+    assert float(fn(250)) == pytest.approx(0.002)
+
+
+def test_theory_lr():
+    assert schedule.theory_lr(16, 10000, beta=0.9) == pytest.approx(
+        (16 * 0.1 ** 3) ** 0.5 / 100.0)
+
+
+# --- steps --------------------------------------------------------------------
+
+def test_input_specs_shapes():
+    cfg = configs.get_config("gemma2-27b")
+    s = steps_mod.input_specs(cfg, "train_4k", nodes=8)
+    assert s["tokens"].shape == (8, 32, 4096)
+    s = steps_mod.input_specs(cfg, "prefill_32k")
+    assert s["tokens"].shape == (32, 32768)
+    s = steps_mod.input_specs(cfg, "decode_32k")
+    assert s["token"].shape == (128, 1)
+    cfg_v = configs.get_config("llama-3.2-vision-90b")
+    s = steps_mod.input_specs(cfg_v, "train_4k", nodes=4)
+    assert s["image_embeds"].shape == (4, 64, 1024, 8192)
+    cfg_a = configs.get_config("musicgen-large")
+    s = steps_mod.input_specs(cfg_a, "train_4k", nodes=16)
+    assert s["tokens"].shape == (16, 16, 4096, 4)
+
+
+def test_long500k_override():
+    cfg = configs.get_config("deepseek-67b")
+    c2 = steps_mod.shape_cfg(cfg, "long_500k")
+    assert c2.attention_override_window == steps_mod.LONG_WINDOW
+    assert steps_mod.cache_len_for(c2, "long_500k") == steps_mod.LONG_WINDOW
+    cfg_ssm = configs.get_config("mamba2-1.3b")
+    assert steps_mod.shape_cfg(cfg_ssm, "long_500k") is cfg_ssm
+
+
+def test_train_step_microbatch_equivalence():
+    """Gradient accumulation is exact: micro_batch=2 == full batch."""
+    cfg = configs.reduced_config(configs.get_config("qwen3-0.6b"))
+    n = 4
+    top = topology.one_peer_exponential(n)
+    opt = optim.dmsgd(top, beta=0.9)
+    params = M.init(cfg, jax.random.key(0))
+    stacked = jax.tree.map(lambda p: jnp.broadcast_to(p, (n,) + p.shape),
+                           params)
+    tokens = jax.random.randint(jax.random.key(1), (n, 4, 16), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    f_full = steps_mod.make_train_step(cfg, opt, micro_batch=None)
+    f_mb = steps_mod.make_train_step(cfg, opt, micro_batch=2)
+    s1 = opt.init(stacked)
+    p1, s1b, l1 = f_full(0, stacked, s1, batch, 0.01)
+    s2 = opt.init(stacked)
+    p2, s2b, l2 = f_mb(0, stacked, s2, batch, 0.01)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-4)
+    # bf16 activations => accumulation-order noise ~1e-3 absolute
+    for a, b in zip(jax.tree.leaves(s1b.momentum),
+                    jax.tree.leaves(s2b.momentum)):
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-3)
+
+
+# --- hlo_cost -----------------------------------------------------------------
+
+def test_hlo_cost_scan_trip_count():
+    L, B, D = 7, 8, 64
+
+    def f(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32)).compile().as_text()
+    c = analyze_hlo(txt)
+    expect = 2 * B * D * D * L
+    assert expect <= c.flops <= 1.3 * expect
+
+
+def test_hlo_cost_grad_remat():
+    L, B, D = 5, 4, 32
+
+    def loss(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(jax.checkpoint(body), x, w)
+        return (y ** 2).sum()
+
+    txt = jax.jit(jax.grad(loss)).lower(
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32)).compile().as_text()
+    c = analyze_hlo(txt)
+    per = 2 * B * D * D
+    # fwd + remat-fwd + 2x bwd = 4x, modulo elementwise noise
+    assert 3.5 * L * per <= c.flops <= 5.0 * L * per

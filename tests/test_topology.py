@@ -1,0 +1,250 @@
+"""Tests for weight-matrix families — re-proving the paper's algebra.
+
+Covers Proposition 1, Lemma 1 / Lemma 3, Remarks 4/5, Appendix A.3/B.3.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import spectral, topology
+
+
+ALL_STATIC = ["ring", "star", "grid", "torus", "half_random", "static_exp", "full"]
+
+
+def _is_doubly_stochastic(W, tol=1e-12):
+    n = W.shape[0]
+    return (np.allclose(W.sum(axis=0), 1.0, atol=tol)
+            and np.allclose(W.sum(axis=1), 1.0, atol=tol)
+            and (W >= -tol).all())
+
+
+@pytest.mark.parametrize("name", ALL_STATIC)
+@pytest.mark.parametrize("n", [4, 6, 8, 12, 16, 17, 32])
+def test_static_doubly_stochastic(name, n):
+    top = topology.get_topology(name, n)
+    assert _is_doubly_stochastic(top.weights(0)), f"{name} n={n}"
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64])
+def test_hypercube_doubly_stochastic_and_gap(n):
+    top = topology.get_topology("hypercube", n)
+    W = top.weights(0)
+    assert _is_doubly_stochastic(W)
+    # Remark 2: 1 - rho = 2/(1 + log2 n)
+    assert spectral.spectral_gap(W) == pytest.approx(2 / (1 + math.log2(n)), abs=1e-9)
+
+
+@pytest.mark.parametrize("n", [6, 8, 16, 32, 64])
+@pytest.mark.parametrize("k", [0, 1, 3, 7])
+def test_one_peer_doubly_stochastic(n, k):
+    top = topology.get_topology("one_peer_exp", n)
+    W = top.weights(k)
+    assert _is_doubly_stochastic(W)
+    # exactly one off-diagonal nonzero per row/col (one peer!)
+    offdiag = W.copy()
+    np.fill_diagonal(offdiag, 0.0)
+    assert ((offdiag > 0).sum(axis=1) == 1).all()
+    assert ((offdiag > 0).sum(axis=0) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1: spectral gap of the static exponential graph
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 6, 8, 10, 16, 24, 32, 64, 100, 128, 256])
+def test_prop1_even_n_exact(n):
+    W = topology.static_exponential(n).weights(0)
+    gap = spectral.spectral_gap(W)
+    assert gap == pytest.approx(spectral.static_exp_gap_closed_form(n), abs=1e-9)
+
+
+@pytest.mark.parametrize("n", [5, 7, 9, 11, 17, 33, 63, 101])
+def test_prop1_odd_n_strict_upper_bound(n):
+    W = topology.static_exponential(n).weights(0)
+    rho = spectral.rho(W)
+    bound = 1.0 - spectral.static_exp_gap_closed_form(n)
+    assert rho < bound + 1e-12
+    assert rho < bound - 1e-9 or n <= 3  # strict for odd n (paper: "<")
+
+
+@pytest.mark.parametrize("n", [4, 6, 8, 11, 16, 29, 64])
+def test_prop1_l2_residual_equals_rho(n):
+    """||W - (1/n)11^T||_2 == rho(W) for the exponential graph (Remark 1)."""
+    W = topology.static_exponential(n).weights(0)
+    assert spectral.residual_norm(W) == pytest.approx(spectral.rho(W), abs=1e-9)
+
+
+def test_static_exp_matches_eq5_structure():
+    """n=6 example of Fig. 6: neighbors at offsets 1, 2, 4 with weight 1/4."""
+    W = topology.static_exponential(6).weights(0)
+    expect_row0 = np.array([0.25, 0.25, 0.25, 0.0, 0.25, 0.0])
+    np.testing.assert_allclose(W[0], expect_row0)
+    # circulant
+    for i in range(6):
+        np.testing.assert_allclose(W[i], np.roll(expect_row0, i))
+
+
+def test_spectral_gap_ordering_exp_beats_ring_grid():
+    """Fig. 3: static exponential has far larger gap than ring/grid."""
+    for n in [16, 64, 144]:
+        g_exp = spectral.spectral_gap(topology.static_exponential(n).weights(0))
+        g_ring = spectral.spectral_gap(topology.ring(n).weights(0))
+        g_grid = spectral.spectral_gap(topology.grid_2d(n).weights(0))
+        assert g_exp > g_grid > 0
+        assert g_exp > g_ring > 0
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 / Lemma 3: periodic exact averaging of one-peer exponential graphs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128])
+def test_lemma1_exact_averaging_power_of_two(n):
+    top = topology.one_peer_exponential(n)
+    tau = int(math.log2(n))
+    P = np.eye(n)
+    for k in range(tau):
+        P = top.weights(k) @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [8, 16])
+@pytest.mark.parametrize("k0", [0, 1, 2, 5])
+def test_lemma1_any_tau_consecutive(n, k0):
+    """Eq. (8): ANY tau consecutive matrices multiply to (1/n)11^T."""
+    top = topology.one_peer_exponential(n)
+    tau = int(math.log2(n))
+    P = np.eye(n)
+    for k in range(k0, k0 + tau):
+        P = top.weights(k) @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_lemma1_consensus_residue_form(n):
+    """Eq. (9): product of (W - J) over one period is exactly zero."""
+    top = topology.one_peer_exponential(n)
+    tau = int(math.log2(n))
+    J = np.ones((n, n)) / n
+    P = np.eye(n)
+    for k in range(tau):
+        P = (top.weights(k) - J) @ P
+    np.testing.assert_allclose(P, 0.0, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [3, 6, 12, 20])
+def test_remark4_non_power_of_two_no_exact_averaging(n):
+    top = topology.one_peer_exponential(n)
+    tau = int(math.ceil(math.log2(n)))
+    P = np.eye(n)
+    for k in range(3 * tau):  # generously many periods
+        P = top.weights(k) @ P
+    assert not np.allclose(P, np.ones((n, n)) / n, atol=1e-6)
+    # ... but it does average asymptotically (Fig. 10)
+    for k in range(3 * tau, 600):
+        P = top.weights(k) @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_remark5_random_permutation_exact_averaging(n):
+    """Without-replacement sampling keeps exact averaging each period."""
+    top = topology.one_peer_exponential(n, schedule="random_perm", seed=3)
+    tau = int(math.log2(n))
+    for period in range(4):
+        P = np.eye(n)
+        for k in range(period * tau, (period + 1) * tau):
+            P = top.weights(k) @ P
+        np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+
+
+def test_remark5_uniform_sampling_not_exact_in_one_period():
+    """With replacement there exist periods missing a matrix (n=16, seed=0)."""
+    n, tau = 16, 4
+    top = topology.one_peer_exponential(n, schedule="uniform", seed=0)
+    exact_every_period = True
+    for period in range(8):
+        P = np.eye(n)
+        for k in range(period * tau, (period + 1) * tau):
+            P = top.weights(k) @ P
+        if not np.allclose(P, np.ones((n, n)) / n, atol=1e-9):
+            exact_every_period = False
+    assert not exact_every_period
+    # asymptotically exact with probability one (App. B.3.2)
+    P = np.eye(n)
+    for k in range(400):
+        P = top.weights(k) @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-9)
+
+
+def test_static_exp_only_asymptotic(n=16):
+    """Fig. 4: static exponential reaches average only asymptotically."""
+    top = topology.static_exponential(n)
+    res = spectral.consensus_residue_products(top, steps=8)
+    assert res[3] > 1e-6  # not exact after tau steps
+    assert res[-1] < res[0]  # but decaying geometrically
+    res_long = spectral.consensus_residue_products(top, steps=200)
+    assert res_long[-1] < 1e-8
+
+
+def test_one_peer_residue_hits_zero(n=16):
+    top = topology.one_peer_exponential(n)
+    res = spectral.consensus_residue_products(top, steps=8)
+    tau = int(math.log2(n))
+    assert res[tau - 1] < 1e-12
+    assert (res[tau:] < 1e-12).all()
+
+
+def test_random_match_doubly_stochastic_and_asymptotic(n=16):
+    top = topology.bipartite_random_match(n, seed=1)
+    for k in range(5):
+        assert _is_doubly_stochastic(top.weights(k))
+    res = spectral.consensus_residue_products(top, steps=200, seed=5)
+    assert res[int(math.log2(n)) - 1] > 1e-9  # no periodic exactness
+    assert res[-1] < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Table 5 orderings
+# ---------------------------------------------------------------------------
+
+def test_table5_max_degree():
+    n = 64
+    assert topology.ring(n).max_degree == 2
+    assert topology.star(n).max_degree == n - 1
+    assert topology.grid_2d(n).max_degree == 4
+    assert topology.torus_2d(n).max_degree == 4
+    assert topology.static_exponential(n).max_degree == int(math.log2(n))
+    assert topology.one_peer_exponential(n).max_degree == 1
+    assert topology.bipartite_random_match(n).max_degree == 1
+
+
+def test_transient_iteration_ordering():
+    """Tables 7: ring Omega(n^7) >> grid Omega(n^5 log^2) >> exp Omega(n^3 log^2)."""
+    n = 64
+    t_ring = spectral.transient_iterations(
+        n, spectral.spectral_gap(topology.ring(n).weights(0)))
+    t_grid = spectral.transient_iterations(
+        n, spectral.spectral_gap(topology.grid_2d(n).weights(0)))
+    t_exp = spectral.transient_iterations(
+        n, spectral.spectral_gap(topology.static_exponential(n).weights(0)))
+    assert t_ring > t_grid > t_exp
+
+
+def test_one_peer_hypercube_exact_averaging():
+    """Remark 6: the symmetric one-peer hypercube also exactly averages in
+    tau steps; each realization is symmetric (unlike one-peer exponential)."""
+    for n in (4, 8, 16, 32):
+        top = topology.one_peer_hypercube(n)
+        tau = int(math.log2(n))
+        P = np.eye(n)
+        for k in range(tau):
+            W = top.weights(k)
+            assert np.allclose(W, W.T)           # symmetric
+            assert _is_doubly_stochastic(W)
+            P = W @ P
+        np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+    with pytest.raises(ValueError):
+        topology.one_peer_hypercube(6)
