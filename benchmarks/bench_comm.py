@@ -3,34 +3,60 @@
 Structural: counts gossip rounds (= ppermute launches) and bytes per node
 per iteration for a fixed model size, plus the theoretical transient-
 iteration complexity from the measured spectral gap (eq. 4).  Also measures
-the wall time of one fused DmSGD gossip (CPU, stacked reference path).
+the wall time of one fused DmSGD gossip on a realistic MULTI-LEAF pytree
+(~100 leaves, 1M params) through both engines:
+
+  * flat (production): pack leaves into one (n, B) buffer per dtype,
+    one roll per shift per dtype group, fused combine;
+  * per-leaf (historical): one roll per leaf per shift.
+
+The engine comparison runs over an 8-way node-sharded mesh (the paper's
+regime: gossip cost == collective cost), where the per-leaf path launches
+~100 collective-permutes per shift and the flat path exactly one per dtype
+group.  When the hosting process has a single device, the comparison is
+re-executed in a subprocess with ``--xla_force_host_platform_device_count=8``
+(XLA locks the device count at first init).
 """
 from __future__ import annotations
 
 import math
-import time
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import gossip, optim, spectral, topology
+from repro.core import flatbuf, gossip, spectral, topology
+
 from .common import emit, time_fn
 
-MODEL_BYTES = 4 * 1_000_000  # 1M-param f32 model buffer per node
+def _transformer_like_tree(n: int, n_blocks: int = 24):
+    """~1M params split over 4 * n_blocks + 1 leaves (transformer-shaped)."""
+    per_block = 1_000_000 // (n_blocks + 1)
+    leaves = {}
+    for i in range(n_blocks):
+        q = per_block // 4
+        leaves[f"blk{i:02d}"] = {
+            "attn": jnp.zeros((n, q), jnp.float32),
+            "mlp_in": jnp.zeros((n, q), jnp.float32),
+            "mlp_out": jnp.zeros((n, q), jnp.float32),
+            "ln": jnp.zeros((n, per_block - 3 * q), jnp.float32),
+        }
+    leaves["embed"] = jnp.zeros((n, per_block), jnp.float32)
+    return leaves
 
 
 def run(n: int = 16) -> None:
     tree = {"w": jnp.zeros((n, 250_000, 4), jnp.float32)}  # 1M f32 per node
+    layout = flatbuf.layout_of(tree)
     for name in ["ring", "grid", "static_exp", "one_peer_exp",
                  "random_match", "full"]:
         top = topology.get_topology(name, n)
-        spec = gossip.gossip_spec(top, 0)
-        if spec["kind"] == "ppermute":
-            rounds = spec["rounds"]
-            bytes_per_iter = rounds * MODEL_BYTES * 2  # x + momentum payload
-        else:
-            rounds = 1
-            bytes_per_iter = top.max_degree * MODEL_BYTES * 2
+        spec = gossip.gossip_spec(top, 0, layout=layout)
+        rounds = spec["rounds"]
+        # same packed-layout accounting for both kinds; x2 = x + momentum
+        bytes_per_iter = spec["bytes_per_node_per_step"] * 2
         us = time_fn(lambda t=tree, tp=top: gossip.mix(t, tp, 0), iters=5)
         W = top.weights(0)
         gap = spectral.spectral_gap(W) if not top.time_varying else float("nan")
@@ -45,3 +71,77 @@ def run(n: int = 16) -> None:
              f"degree={top.max_degree};rounds={rounds};"
              f"bytes_per_iter={bytes_per_iter};gap={gap:.4f};"
              f"transient~{trans:.3g}")
+
+    # flat vs per-leaf engine at 8 NODES (8-way sharded mesh)
+    if jax.device_count() >= 8:
+        engine_compare_spmd()
+    else:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count=8"
+                            ).strip()
+        # the flag only multiplies CPU host devices; pin the child to the
+        # cpu platform so a 1-GPU host doesn't end up on a 1-device mesh
+        env["JAX_PLATFORMS"] = "cpu"
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_comm", "--engine-spmd"],
+            env=env, cwd=repo, capture_output=True, text=True, timeout=900)
+        sys.stdout.write(r.stdout)
+        if r.returncode:
+            sys.stderr.write(r.stderr)
+            raise RuntimeError(
+                f"engine-spmd comparison subprocess failed "
+                f"(exit {r.returncode}); see stderr above")
+
+
+def engine_compare_spmd(nn: int = 8) -> None:
+    """Time one gossip round, flat vs per-leaf, node-sharded over 8 devices.
+
+    This is the regime the flat engine exists for: every roll is a
+    collective-permute, so the per-leaf path pays one collective LAUNCH per
+    leaf per shift (~100/step on a transformer) while the packed path pays
+    one per dtype group."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    if jax.device_count() < nn:
+        raise RuntimeError(
+            f"engine comparison needs {nn} devices, got "
+            f"{jax.device_count()}; run via bench_comm.run() which "
+            "re-executes with forced host devices")
+    mesh = Mesh(jax.devices()[:nn], ("node",))
+    sh = NamedSharding(mesh, P("node"))
+    mtree = _transformer_like_tree(nn)
+    n_leaves = len(jax.tree.leaves(mtree))
+    shard = jax.tree.map(lambda _: sh, mtree)
+    mtree = jax.device_put(mtree, shard)
+    layout_m = flatbuf.layout_of(mtree)
+    for name in ["one_peer_exp", "static_exp"]:
+        top = topology.get_topology(name, nn)
+        self_w, shifts = top.neighbor_schedule(0)
+        flat_fn = jax.jit(lambda t: gossip.mix_shifts(t, self_w, shifts),
+                          in_shardings=(shard,), out_shardings=shard)
+        leaf_fn = jax.jit(
+            lambda t: gossip.mix_shifts_per_leaf(t, self_w, shifts),
+            in_shardings=(shard,), out_shardings=shard)
+        # ABBA order: thermal/contention drift hits both engines equally
+        us_flat = time_fn(flat_fn, mtree, iters=10)
+        us_leaf = min(time_fn(leaf_fn, mtree, iters=10),
+                      time_fn(leaf_fn, mtree, iters=10))
+        us_flat = min(us_flat, time_fn(flat_fn, mtree, iters=10))
+        rolls_flat = len(shifts) * len(layout_m.groups)
+        rolls_leaf = len(shifts) * n_leaves
+        emit(f"comm_engine_{name}_flat", us_flat,
+             f"n={nn};leaves={n_leaves};permutes_per_step={rolls_flat}")
+        emit(f"comm_engine_{name}_perleaf", us_leaf,
+             f"n={nn};leaves={n_leaves};permutes_per_step={rolls_leaf};"
+             f"flat_speedup={us_leaf / max(us_flat, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    if "--engine-spmd" in sys.argv:
+        engine_compare_spmd()
+    else:
+        run()

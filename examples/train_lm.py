@@ -21,9 +21,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import optim, schedule, topology
+from repro.core import schedule, topology
 from repro.data import SyntheticLM
-from repro.launch import steps as steps_mod
+from repro.launch.train import build_trainer
 from repro.models import model as M
 from repro.models.model import ModelConfig
 
@@ -49,16 +49,14 @@ def make_cfg(preset: str) -> ModelConfig:
 def train_one(cfg, topname, *, nodes, steps, batch, seq, lr0, hetero, seed):
     top = (topology.full_averaging(nodes) if topname == "parallel"
            else topology.get_topology(topname, nodes))
-    opt = (optim.parallel_msgd(nodes) if topname == "parallel"
-           else optim.dmsgd(top, beta=0.9))
+    # realization-keyed compile cache (see launch.train.build_trainer):
+    # works for aperiodic schedules too, unlike a step % period table.
+    opt, step_for = build_trainer(
+        cfg, top, "parallel_msgd" if topname == "parallel" else "dmsgd", 0.9)
     params = M.init(cfg, jax.random.key(seed))
     stacked = jax.tree.map(lambda p: jnp.broadcast_to(p, (nodes,) + p.shape),
                            params)
     state = opt.init(stacked)
-    step_fn = steps_mod.make_train_step(cfg, opt)
-    period = top.period if top.period < 64 else 1
-    jitted = [jax.jit(lambda p, s, b, lr, k=k: step_fn(k, p, s, b, lr))
-              for k in range(period)]
     data = SyntheticLM(cfg.vocab_size, nodes, hetero=hetero, seed=seed)
     lr_fn = schedule.warmup_step_decay(lr0, max(steps // 20, 1),
                                        [int(steps * 0.7)])
@@ -66,8 +64,7 @@ def train_one(cfg, topname, *, nodes, steps, batch, seq, lr0, hetero, seed):
     t0 = time.time()
     for k in range(steps):
         bt = {"tokens": jnp.asarray(data.sample(k, batch, seq))}
-        stacked, state, loss = jitted[k % period](stacked, state, bt,
-                                                  lr_fn(k))
+        stacked, state, loss = step_for(k)(stacked, state, bt, lr_fn(k))
         if k % 10 == 0 or k == steps - 1:
             curve.append((k, float(loss)))
             print(f"  [{topname}] step {k:4d} loss {float(loss):.4f} "

@@ -1,0 +1,162 @@
+"""Flat-buffer packing: one contiguous (n, B) gossip payload per dtype.
+
+The gossip state is a pytree whose leaves all carry a leading node axis of
+size ``n``.  Mixing leaf-by-leaf issues one roll (=> one collective-permute
+under GSPMD) **per leaf per shift** -- a transformer with ~100 leaves pays
+~100 tiny collectives per iteration, burying the paper's Omega(1)
+communication claim in launch overhead.  This module packs all leaves of a
+common dtype into ONE contiguous ``(n, B)`` buffer so the production path in
+:mod:`repro.core.gossip` rolls each dtype group exactly once per shift,
+regardless of leaf count, and feeds the fused ``gossip_mix`` Pallas kernel
+directly (the buffer is padded to the kernel's (8, 1024) f32 tile grid, so
+the kernel never re-pads).
+
+The layout (group membership, per-leaf offsets/shapes, padding, segment ids
+for per-leaf quantization scales) depends only on the tree *structure*, so it
+is computed once per structure and cached process-wide; ``pack``/``unpack``
+inside a jit trace are pure reshape/concat/slice -- XLA fuses them into the
+surrounding computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gossip_mix import kernel as _gm_kernel
+
+PyTree = Any
+
+__all__ = ["FlatLayout", "GroupLayout", "LeafSlot", "layout_of", "pack",
+           "unpack", "wire_bytes_per_round", "PAD_MULTIPLE"]
+
+# Pad each group's flat width to this multiple: with TILE_COLS lanes the
+# flattened (n * B) buffer then reshapes to a whole number of TILE_ROWS-row
+# tiles for any n, so ops.gossip_mix takes its zero-copy path.
+PAD_MULTIPLE = _gm_kernel.TILE_ROWS * _gm_kernel.TILE_COLS
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's strip inside its dtype group's flat buffer."""
+
+    leaf_index: int        # position in jax.tree.leaves order
+    offset: int            # start column in the (n, B) group buffer
+    size: int              # number of elements per node (prod(shape[1:]))
+    shape: tuple           # full leaf shape, including the node axis
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GroupLayout:
+    dtype: Any             # jnp dtype of every leaf in the group
+    slots: tuple           # tuple[LeafSlot, ...] in leaf order
+    size: int              # used columns (sum of slot sizes)
+    padded: int            # allocated columns (size rounded up to tile grid)
+    # (padded,) int32: element -> slot position within this group; padding
+    # elements map to len(slots).  Consumed by the per-leaf int8 scale
+    # expansion in gossip.mix_shifts.
+    seg_ids: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FlatLayout:
+    treedef: Any
+    n: int                 # node-axis size shared by every leaf
+    groups: tuple          # tuple[GroupLayout, ...]
+    n_leaves: int
+
+    def group_for(self, dtype) -> GroupLayout:
+        dt = jnp.dtype(dtype)
+        for g in self.groups:
+            if g.dtype == dt:
+                return g
+        raise KeyError(f"no group with dtype {dtype}")
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def _pad_up(size: int) -> int:
+    return max(-(-size // PAD_MULTIPLE) * PAD_MULTIPLE, PAD_MULTIPLE)
+
+
+def layout_of(tree: PyTree) -> FlatLayout:
+    """Compute (or fetch) the packing layout for ``tree``'s structure."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    key = (treedef,
+           tuple((jnp.dtype(l.dtype).name, tuple(l.shape)) for l in leaves))
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    n = leaves[0].shape[0] if leaves[0].ndim else None
+    for leaf in leaves:
+        if leaf.ndim == 0 or leaf.shape[0] != n:
+            raise ValueError(
+                "every gossip leaf needs the same leading node axis; got "
+                f"shapes {[tuple(l.shape) for l in leaves]}")
+
+    by_dtype: dict = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+
+    groups = []
+    for dt, idxs in by_dtype.items():
+        slots, off = [], 0
+        for i in idxs:
+            size = int(np.prod(leaves[i].shape[1:], dtype=np.int64))
+            slots.append(LeafSlot(i, off, size, tuple(leaves[i].shape)))
+            off += size
+        padded = _pad_up(off)
+        seg = np.full((padded,), len(slots), np.int32)
+        for pos, s in enumerate(slots):
+            seg[s.offset:s.offset + s.size] = pos
+        groups.append(GroupLayout(dt, tuple(slots), off, padded, seg))
+
+    layout = FlatLayout(treedef, int(n), tuple(groups), len(leaves))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def pack(tree: PyTree, layout: FlatLayout | None = None):
+    """tree -> (layout, [(n, padded) buffer per dtype group])."""
+    if layout is None:
+        layout = layout_of(tree)
+    leaves = jax.tree.leaves(tree)
+    n = layout.n
+    bufs = []
+    for g in layout.groups:
+        strips = [leaves[s.leaf_index].reshape(n, -1) for s in g.slots]
+        buf = strips[0] if len(strips) == 1 else jnp.concatenate(strips, 1)
+        if g.padded != g.size:
+            buf = jnp.pad(buf, ((0, 0), (0, g.padded - g.size)))
+        bufs.append(buf)
+    return layout, bufs
+
+
+def unpack(layout: FlatLayout, bufs) -> PyTree:
+    """Inverse of :func:`pack` (padding is discarded)."""
+    leaves = [None] * layout.n_leaves
+    for g, buf in zip(layout.groups, bufs):
+        for s in g.slots:
+            leaves[s.leaf_index] = (
+                buf[:, s.offset:s.offset + s.size].reshape(s.shape))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def wire_bytes_per_round(layout: FlatLayout,
+                         compression: str | None = None) -> int:
+    """Bytes one node sends per gossip round (one shift, all dtype groups)."""
+    total = 0
+    for g in layout.groups:
+        if compression == "int8":
+            # int8 payload + one f32 scale per leaf segment (incl. padding)
+            total += g.padded + 4 * (len(g.slots) + 1)
+        else:
+            total += g.padded * jnp.dtype(g.dtype).itemsize
+    return total

@@ -1,4 +1,4 @@
-"""Partial averaging (gossip) over the node axis.
+"""Partial averaging (gossip) over the node axis — flat-buffer fused engine.
 
 State layout: every decentralized quantity (params, momentum, grads) is a
 pytree whose leaves carry a **leading node axis** of size ``n``.  On the
@@ -6,22 +6,30 @@ production mesh that axis is sharded over the ``node`` mesh axis, so each
 device block holds exactly its node's replica (itself sharded over
 ``fsdp``/``model``).
 
-Two algebraically identical paths:
+Both mixing paths first pack the pytree into one contiguous ``(n, B)``
+buffer per dtype (:mod:`repro.core.flatbuf`), so the collective cost is
+independent of the leaf count:
 
-* ``mix_dense(tree, W)`` -- reference: ``einsum('ij,j...->i...', W, leaf)``.
-  Exact for *any* doubly-stochastic ``W`` (random match, star, ...).  Under
-  GSPMD this lowers to an all-gather over the node axis: O(n) bytes.
+* ``mix_dense(tree, W)`` -- reference: one ``einsum('ij,jb->ib', W, buf)``
+  per dtype group.  Exact for *any* doubly-stochastic ``W`` (random match,
+  star, ...).  Under GSPMD this lowers to an all-gather over the node axis:
+  O(n) bytes.
 
 * ``mix_shifts(tree, self_w, shifts)`` -- production: for circulant
-  topologies (ring, static/one-peer exponential), gossip is a weighted sum of
-  **rolls** of the node axis.  ``jnp.roll`` with a static shift on a sharded
-  axis lowers to ``collective-permute`` -- the TPU-native equivalent of
-  BlueFog's ``neighbor_allreduce``:  one-peer exponential = ONE
-  collective-permute per iteration (the paper's Omega(1) claim), static
-  exponential = ceil(log2 n) permutes (Omega(log2 n)).
+  topologies (ring, static/one-peer exponential), gossip is a weighted sum
+  of **rolls** of the node axis.  ``jnp.roll`` with a static shift on a
+  sharded axis lowers to ``collective-permute`` -- the TPU-native equivalent
+  of BlueFog's ``neighbor_allreduce``.  One roll per shift **per dtype
+  group** (NOT per leaf): one-peer exponential = ONE collective-permute per
+  iteration (the paper's Omega(1) claim), static exponential =
+  ceil(log2 n) permutes (Omega(log2 n)).  The weighted combine
+  ``w_self*x + sum_d w_d*recv_d`` runs through the fused ``gossip_mix``
+  Pallas kernel on TPU (one VMEM-tiled HBM sweep over the packed buffer)
+  and through the algebraically identical ``ref`` path elsewhere.
 
-Both paths preserve the global mean exactly (double stochasticity), which the
-property tests assert.
+Both paths preserve the global mean exactly (double stochasticity), which
+the property tests assert; the flat path is bit-identical to the historical
+per-leaf path (kept as ``mix_shifts_per_leaf`` for tests/benchmarks).
 """
 from __future__ import annotations
 
@@ -30,24 +38,72 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from . import flatbuf
 from .topology import Topology
 
 PyTree = Any
 
-__all__ = ["mix_dense", "mix_shifts", "mix", "gossip_spec"]
+__all__ = ["mix_dense", "mix_shifts", "mix", "gossip_spec",
+           "mix_shifts_per_leaf", "MAX_SWITCH_PHASES"]
+
+# lax.switch over more phases than this would bloat one compiled executable
+# with hundreds of branches; schedules longer than this (random_match and
+# the random one-peer schedules report period 1<<30) are APERIODIC and must
+# use the static-step path, which compiles one function per realization.
+MAX_SWITCH_PHASES = 64
+
+
+def _use_pallas() -> bool:
+    # Single-chip TPU only: pallas_call has no GSPMD partitioning rule, so
+    # under a multi-device jit XLA would replicate the node-sharded buffer
+    # around the custom call (O(n*B) gathers) -- the opposite of the fused
+    # engine's point.  Sharded meshes take the ref combine (pure jnp; XLA
+    # fuses it into one elementwise pass and the rolls still lower to one
+    # collective-permute each).  Multi-chip kernel use needs a shard_map
+    # wrapper -- ROADMAP open item.
+    return jax.default_backend() == "tpu" and jax.device_count() == 1
+
+
+def _combine(x, recvs, w_self: float, ws: tuple):
+    """out = w_self*x + sum_d ws[d]*recvs[d] over (n, B) packed buffers."""
+    if _use_pallas():
+        from repro.kernels.gossip_mix import ops as gm_ops
+        return gm_ops.gossip_mix(x, recvs, w_self=float(w_self),
+                                 ws=tuple(float(w) for w in ws))
+    from repro.kernels.gossip_mix import ref as gm_ref
+    return gm_ref.gossip_mix_ref(x, recvs, float(w_self), ws)
 
 
 def mix_dense(tree: PyTree, W: jax.Array) -> PyTree:
-    """x_i <- sum_j W[i, j] x_j  over the leading node axis of every leaf."""
+    """x_i <- sum_j W[i, j] x_j  over the leading node axis of every leaf.
 
-    def _leaf(x):
-        Wl = W.astype(jnp.float32)
-        y = jnp.einsum("ij,j...->i...", Wl, x.astype(jnp.float32))
-        return y.astype(x.dtype)
+    One (n, n) x (n, B) matmul per dtype group on the packed buffer."""
+    layout, bufs = flatbuf.pack(tree)
+    Wl = W.astype(jnp.float32)
+    out = [jnp.einsum("ij,jb->ib", Wl, b.astype(jnp.float32)).astype(b.dtype)
+           for b in bufs]
+    return flatbuf.unpack(layout, out)
 
-    return jax.tree.map(_leaf, tree)
+
+def _leaf_scales(tree: PyTree, layout: flatbuf.FlatLayout):
+    """Per-(node, leaf) int8 scales, grouped to match the packed buffers.
+
+    Returns one (n, L_g + 1) f32 matrix per group; the trailing column is
+    the padding segment's scale (1.0, so padded zeros quantize to zero).
+    Matches the historical per-leaf path bit-for-bit: scale_l = max|x_l| /
+    127 along each node's slice."""
+    leaves = jax.tree.leaves(tree)
+    outs = []
+    for g in layout.groups:
+        cols = []
+        for s in g.slots:
+            x32 = leaves[s.leaf_index].astype(jnp.float32).reshape(
+                layout.n, -1)
+            cols.append(jnp.max(jnp.abs(x32), axis=1) / 127.0 + 1e-30)
+        cols.append(jnp.ones((layout.n,), jnp.float32))
+        outs.append(jnp.stack(cols, axis=1))
+    return outs
 
 
 def mix_shifts(tree: PyTree, self_weight: float,
@@ -58,13 +114,50 @@ def mix_shifts(tree: PyTree, self_weight: float,
     Each (s_d, w_d) descriptor means node i *sends* its buffer to node
     (i + s_d) mod n; jnp.roll(x, s, axis=0)[i] == x[(i - s) mod n].
 
+    Fused flat path: ONE roll per shift per dtype group, then one fused
+    weighted combine over the packed buffer.
+
     compression='int8': QSGD-style quantized payload (beyond-paper, cf. the
     paper's related work [2, 24, 26]): the SENT buffer is symmetric-int8
-    quantized per node (scale = max|x|/127 along the node's slice), so the
-    collective-permute moves 1 byte/element (+1 scale scalar) instead of 4;
+    quantized with a per-(node, leaf-segment) scale (identical to the
+    historical per-leaf quantizer), so the collective-permute moves
+    1 byte/element plus one f32 scale per leaf instead of 4 bytes/element;
     the local term stays full precision.  Biased (~0.4% of per-leaf max);
     exact-averaging of Lemma 1 becomes approximate -- measured in tests.
     """
+    layout, bufs = flatbuf.pack(tree)
+    ws = tuple(w for _, w in shifts)
+
+    if compression == "int8":
+        scales = _leaf_scales(tree, layout)
+        out = []
+        for g, buf, sc in zip(layout.groups, bufs, scales):
+            seg = jnp.asarray(g.seg_ids)
+            x32 = buf.astype(jnp.float32)
+            q = jnp.round(x32 / sc[:, seg]).astype(jnp.int8)
+            acc = (self_weight * x32) if self_weight else None
+            for s, w in shifts:
+                rq = jnp.roll(q, s, axis=0)        # int8 over the wire
+                rs = jnp.roll(sc, s, axis=0)       # tiny per-leaf scales
+                r = w * (rq.astype(jnp.float32) * rs[:, seg])
+                acc = r if acc is None else acc + r
+            out.append(acc.astype(buf.dtype))
+        return flatbuf.unpack(layout, out)
+
+    out = []
+    for buf in bufs:
+        recvs = [jnp.roll(buf, s, axis=0) for s, _ in shifts]
+        out.append(_combine(buf, recvs, self_weight, ws))
+    return flatbuf.unpack(layout, out)
+
+
+def mix_shifts_per_leaf(tree: PyTree, self_weight: float,
+                        shifts: list[tuple[int, float]],
+                        compression: str | None = None) -> PyTree:
+    """Historical reference path: one roll PER LEAF per shift.
+
+    Algebraically (and bit-) identical to :func:`mix_shifts`; kept for the
+    pack->mix->unpack equivalence tests and the bench_comm comparison."""
 
     def _leaf(x):
         x32 = x.astype(jnp.float32)
@@ -75,8 +168,8 @@ def mix_shifts(tree: PyTree, self_weight: float,
                      / 127.0 + 1e-30)
             q = jnp.round(x32 / scale).astype(jnp.int8)
             for s, w in shifts:
-                rq = jnp.roll(q, s, axis=0)          # int8 over the wire
-                rs = jnp.roll(scale, s, axis=0)      # per-node scale scalar
+                rq = jnp.roll(q, s, axis=0)
+                rs = jnp.roll(scale, s, axis=0)
                 r = w * (rq.astype(jnp.float32) * rs)
                 acc = r if acc is None else acc + r
             return acc.astype(x.dtype)
@@ -102,9 +195,23 @@ def mix(tree: PyTree, topology: Topology, step: int,
 def mix_switch(tree: PyTree, topology: Topology, step: jax.Array) -> PyTree:
     """Traced-step variant: lax.switch over the topology's period so one
     compiled function serves the whole schedule (each branch keeps its own
-    static-shift collective-permute)."""
-    period = min(topology.period, 64)
-    branches = [partial(_mix_static, topology=topology, k=k) for k in range(period)]
+    static-shift collective-permute).
+
+    Only valid for genuinely periodic schedules: aperiodic topologies
+    (random_match, one_peer_exp with random_perm/uniform schedules, which
+    report period 1<<30) have no step->realization map a traced switch can
+    enumerate -- silently folding them mod a cap would freeze the schedule
+    to its first few realizations (the bug this guard replaces)."""
+    if topology.period > MAX_SWITCH_PHASES:
+        raise ValueError(
+            f"mix_switch needs a periodic schedule (period <= "
+            f"{MAX_SWITCH_PHASES}), got period={topology.period} for "
+            f"{topology.name!r}; aperiodic/random schedules must use the "
+            "static-step path (launch.train compiles one function per "
+            "realization)")
+    period = topology.period
+    branches = [partial(_mix_static, topology=topology, k=k)
+                for k in range(period)]
     return jax.lax.switch(step % period, branches, tree)
 
 
@@ -112,13 +219,29 @@ def _mix_static(tree: PyTree, *, topology: Topology, k: int) -> PyTree:
     return mix(tree, topology, k)
 
 
-def gossip_spec(topology: Topology, step: int) -> dict:
-    """Structural description of one gossip round (for roofline accounting)."""
+def gossip_spec(topology: Topology, step: int,
+                layout: flatbuf.FlatLayout | None = None,
+                compression: str | None = None) -> dict:
+    """Structural description of one gossip round (for roofline accounting).
+
+    With a ``layout`` (from :func:`flatbuf.layout_of`), adds the packed-path
+    wire accounting: collectives per step and bytes sent per node."""
     if topology.neighbor_schedule is not None:
         _, shifts = topology.neighbor_schedule(step)
-        return {
+        spec = {
             "kind": "ppermute",
             "rounds": len(shifts),
             "shifts": [s for s, _ in shifts],
         }
-    return {"kind": "dense", "rounds": 1, "fanin": topology.max_degree}
+        if layout is not None:
+            per_round = flatbuf.wire_bytes_per_round(layout, compression)
+            spec["dtype_groups"] = len(layout.groups)
+            spec["collectives_per_step"] = len(shifts) * len(layout.groups)
+            spec["bytes_per_node_per_step"] = per_round * len(shifts)
+        return spec
+    spec = {"kind": "dense", "rounds": 1, "fanin": topology.max_degree}
+    if layout is not None:
+        per_round = flatbuf.wire_bytes_per_round(layout, compression)
+        spec["dtype_groups"] = len(layout.groups)
+        spec["bytes_per_node_per_step"] = per_round * topology.max_degree
+    return spec

@@ -60,11 +60,15 @@ class OptState(NamedTuple):
 class DecentralizedOptimizer:
     """(init_fn, update_fn) pair.
 
-    ``update(params, state, grads, step, lr)`` returns (new_params, new_state).
-    ``step`` must be a *static* Python int when the topology is time-varying
-    and the sparse gossip path is desired (the launcher compiles one step
-    function per phase of the topology period); pass ``traced_step=True`` at
-    construction to use the lax.switch path with a traced step instead.
+    ``update(params, state, grads, step, lr, W_override=None)`` returns
+    (new_params, new_state).  ``step`` must be a *static* Python int when
+    the topology is time-varying and the sparse gossip path is desired (the
+    launcher compiles one step function per distinct gossip realization);
+    pass ``traced_step=True`` at construction to use the lax.switch path
+    with a traced step instead (periodic schedules only).  For dense
+    APERIODIC topologies (random_match) pass the realized ``W^{(k)}`` as
+    ``W_override`` -- a traced argument -- so one compiled step serves the
+    whole schedule.
     """
 
     name: str
@@ -72,6 +76,10 @@ class DecentralizedOptimizer:
     beta: float
     init: Callable[[PyTree], OptState]
     update: Callable[..., tuple[PyTree, OptState]]
+    # steps of exact all-reduce warm-up (Corollary 3); update() behaves
+    # differently while int(step) < warmup_steps, so realization-keyed
+    # compile caches must fold the warm-up phase into their key.
+    warmup_steps: int = 0
 
 
 def _zeros_like_tree(params: PyTree) -> PyTree:
@@ -91,7 +99,13 @@ def set_momentum_dtype(dtype) -> None:
 
 
 def _mix(tree: PyTree, topology: Topology, step, traced: bool,
-         compression: str | None = None) -> PyTree:
+         compression: str | None = None, W_override=None) -> PyTree:
+    if W_override is not None:
+        # Dense time-varying topologies (random_match) feed W^{(k)} as a
+        # traced ARGUMENT so one compiled step serves every realization --
+        # baking W in as a constant would freeze the schedule (or force a
+        # recompile per step).
+        return gossip.mix_dense(tree, W_override)
     if traced:
         return gossip.mix_switch(tree, topology, step)
     return gossip.mix(tree, topology, int(step), compression)
@@ -112,10 +126,13 @@ def dmsgd(topology: Topology, beta: float = 0.9,
     def init(params: PyTree) -> OptState:
         return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
 
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
+               W_override=None):
         m, x = state.momentum, params
         # Fused single gossip round: mix (beta m + g) and (x - gamma m)
-        # with the same W^{(k)}.
+        # with the same W^{(k)}.  Both pre-trees are f32, so the flat-buffer
+        # engine packs the whole payload into ONE (n, 2P) buffer -- the
+        # one-peer exponential step is literally one collective-permute.
         pre_m = jax.tree.map(
             lambda mi, gi: (beta * mi.astype(jnp.float32)
                             + gi.astype(jnp.float32)), m, grads)
@@ -126,13 +143,15 @@ def dmsgd(topology: Topology, beta: float = 0.9,
         if (warmup_allreduce_steps and not traced_step
                 and int(step) < warmup_allreduce_steps):
             top_k = full_averaging(topology.n)
+            W_override = None  # warm-up supersedes the realized W^{(k)}
         mixed_m, mixed_x = _mix((pre_m, pre_x), top_k, step, traced_step,
-                                compression)
+                                compression, W_override)
         new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), mixed_m, m)
         new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, x)
         return new_x, OptState(new_m, state.count + 1)
 
-    return DecentralizedOptimizer("dmsgd", topology, beta, init, update)
+    return DecentralizedOptimizer("dmsgd", topology, beta, init, update,
+                                  warmup_steps=warmup_allreduce_steps)
 
 
 def dsgd(topology: Topology, traced_step: bool = False) -> DecentralizedOptimizer:
@@ -148,13 +167,15 @@ def vanilla_dmsgd(topology: Topology, beta: float = 0.9,
     def init(params: PyTree) -> OptState:
         return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
 
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
+               W_override=None):
         new_m = jax.tree.map(
             lambda mi, gi: beta * mi.astype(jnp.float32) + gi.astype(jnp.float32),
             state.momentum, grads)
         pre_x = jax.tree.map(
             lambda xi, mi: xi.astype(jnp.float32) - lr * mi, params, new_m)
-        mixed_x = _mix(pre_x, topology, step, traced_step)
+        mixed_x = _mix(pre_x, topology, step, traced_step,
+                       W_override=W_override)
         new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, params)
         new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m,
                              state.momentum)
@@ -170,13 +191,15 @@ def qg_dmsgd(topology: Topology, beta: float = 0.9,
     def init(params: PyTree) -> OptState:
         return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
 
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
+               W_override=None):
         m = state.momentum
         pre_x = jax.tree.map(
             lambda xi, gi, mi: xi.astype(jnp.float32)
             - lr * (gi.astype(jnp.float32) + beta * mi.astype(jnp.float32)),
             params, grads, m)
-        mixed_x = _mix(pre_x, topology, step, traced_step)
+        mixed_x = _mix(pre_x, topology, step, traced_step,
+                       W_override=W_override)
         # quasi-global momentum: m <- beta m + (1-beta) (x^k - x^{k+1}) / lr
         new_m = jax.tree.map(
             lambda mi, xi, xn: (beta * mi.astype(jnp.float32)
@@ -205,7 +228,8 @@ def parallel_msgd(n: int, beta: float = 0.9) -> DecentralizedOptimizer:
     def init(params: PyTree) -> OptState:
         return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
 
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr):
+    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
+               W_override=None):
         g_avg = jax.tree.map(
             lambda g: jnp.broadcast_to(
                 jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True), g.shape),

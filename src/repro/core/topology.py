@@ -339,19 +339,20 @@ def bipartite_random_match(n: int, seed: int = 0) -> Topology:
     step; matched pairs average (w=1/2 each). Requires even n."""
     if n % 2:
         raise ValueError("bipartite_random_match requires even n")
-    rng = np.random.default_rng(seed)
-    mats: list[np.ndarray] = []
 
     def weights_fn(k: int) -> np.ndarray:
-        while len(mats) <= k:
-            perm = rng.permutation(n)
-            W = np.zeros((n, n), dtype=np.float64)
-            for j in range(n // 2):
-                a, b = perm[2 * j], perm[2 * j + 1]
-                W[a, a] = W[b, b] = 0.5
-                W[a, b] = W[b, a] = 0.5
-            mats.append(W)
-        return mats[k]
+        # Stateless per-step draw, seeded by (seed, k): reproducible AND
+        # O(1) memory -- the trainer realizes W^{(k)} every step of an
+        # arbitrarily long run, so memoizing each (n, n) matrix forever
+        # would grow host RAM without bound.
+        rng = np.random.default_rng((seed, k))
+        perm = rng.permutation(n)
+        W = np.zeros((n, n), dtype=np.float64)
+        for j in range(n // 2):
+            a, b = perm[2 * j], perm[2 * j + 1]
+            W[a, a] = W[b, b] = 0.5
+            W[a, b] = W[b, a] = 0.5
+        return W
 
     return Topology("random_match", n, 1 << 30, 1, weights_fn,
                     time_varying=True)

@@ -202,6 +202,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # newer jaxlib: one dict per program
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     model_axis = meta["model_axis"]
     cost = hlo_cost.analyze_hlo(txt, default_group=model_axis)

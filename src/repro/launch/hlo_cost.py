@@ -178,9 +178,13 @@ def _trip_count(cond_lines: list[str]) -> int:
 
 
 def _operands(line: str) -> list[str]:
-    """Names of operands of an instruction call (top-level args only)."""
+    """Names of operands of an instruction call (top-level args only).
+
+    Commas inside shape brackets and layout/sharding braces
+    (``f32[8,64]{1,0}``) and nested parens must not split operands --
+    scheduled HLO prints dims and a ``{...}`` layout on every shape."""
     start = line.index("(")
-    depth = 0
+    depth = brace = bracket = 0
     out, cur = [], []
     for ch in line[start:]:
         if ch == "(":
@@ -192,10 +196,19 @@ def _operands(line: str) -> list[str]:
             if depth == 0:
                 break
         if depth >= 1:
-            cur.append(ch)
-            if ch == "," and depth == 1:
-                out.append("".join(cur[:-1]).strip())
+            if ch == "{":
+                brace += 1
+            elif ch == "}":
+                brace -= 1
+            elif ch == "[":
+                bracket += 1
+            elif ch == "]":
+                bracket -= 1
+            if ch == "," and depth == 1 and brace == 0 and bracket == 0:
+                out.append("".join(cur).strip())
                 cur = []
+            else:
+                cur.append(ch)
     if cur:
         out.append("".join(cur).strip())
     return [re.sub(r"^%", "", o.split()[-1]) if o else o for o in out]
@@ -405,8 +418,14 @@ class _Analyzer:
             if base_op == "while":
                 mb = re.search(r"body=%?([\w.\-]+)", line)
                 mc = re.search(r"condition=%?([\w.\-]+)", line)
-                trips = (_trip_count(self.comps.get(mc.group(1), []))
-                         if mc else 1)
+                # current XLA annotates the analyzed trip count directly;
+                # fall back to the condition's comparison constant.
+                mk = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                if mk:
+                    trips = int(mk.group(1))
+                else:
+                    trips = (_trip_count(self.comps.get(mc.group(1), []))
+                             if mc else 1)
                 if mb:
                     cost.add(self.analyze(mb.group(1)), k=max(trips, 1))
                 continue

@@ -112,6 +112,10 @@ def train_loss_fn(params, cfg: M.ModelConfig, tokens, image_embeds=None,
     the vocab-sharded logits -- the label logit is extracted with an
     iota==label masked reduction, so the vocab axis stays sharded and only
     per-token scalars cross the mesh (tiny all-reduces)."""
+    if cfg.n_experts and cfg.moe_dropless:
+        # training uses the GShard capacity dispatch (active-param FLOPs);
+        # the dropless exact mixture is the serving/eval path.
+        cfg = dataclasses.replace(cfg, moe_dropless=False)
     logits, aux = M.forward(params, cfg, tokens, image_embeds=image_embeds)
     labels = jnp.roll(tokens, -1, axis=1)
     lo = logits.astype(jnp.float32)            # (..., V), V possibly sharded
@@ -128,9 +132,11 @@ def make_train_step(cfg: M.ModelConfig,
                     opt: optim_mod.DecentralizedOptimizer,
                     *, micro_batch: int | None = None,
                     grads_dtype=jnp.float32):
-    """Returns train_step(params, opt_state, batch, lr) for ONE gossip phase
-    (the topology step is baked in statically via ``gossip_step``); the
-    launcher rotates through the topology period.
+    """Returns train_step(params, opt_state, batch, lr, W_override=None)
+    for ONE gossip realization (the topology step is baked in statically via
+    ``gossip_step``); the launcher compiles one function per distinct
+    realization (see ``launch.train.build_trainer``), or feeds the dense
+    ``W^{(k)}`` through ``W_override`` for aperiodic dense schedules.
 
     Gradients are computed per node (vmap over the leading node axis) with
     optional microbatch accumulation, then fed to the decentralized
@@ -162,7 +168,8 @@ def make_train_step(cfg: M.ModelConfig,
         (loss, g), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), g0), xs)
         return loss, g
 
-    def train_step(gossip_step: int, params, opt_state, batch, lr):
+    def train_step(gossip_step: int, params, opt_state, batch, lr,
+                   W_override=None):
         tokens = batch["tokens"]
         image_embeds = batch.get("image_embeds")
         if image_embeds is None:
@@ -172,7 +179,8 @@ def make_train_step(cfg: M.ModelConfig,
             losses, grads = jax.vmap(per_node_grads)(params, tokens,
                                                      image_embeds)
         new_params, new_state = opt.update(params, opt_state, grads,
-                                           gossip_step, lr)
+                                           gossip_step, lr,
+                                           W_override=W_override)
         return new_params, new_state, losses.mean()
 
     return train_step

@@ -26,13 +26,64 @@ from repro.launch import steps as steps_mod
 
 def build_trainer(cfg, topology, optimizer_name: str, beta: float,
                   micro_batch=None):
+    """Returns (opt, step_for) where ``step_for(step)`` is the compiled
+    train-step callable for that step's gossip realization.
+
+    Compiled functions are keyed by the gossip REALIZATION, not by
+    ``step % period``: aperiodic schedules (random_match, one_peer_exp with
+    random_perm/uniform, which report period 1<<30) draw a fresh matrix
+    every step, and the old ``period >= 64 -> period = 1`` fallback froze
+    them to their step-0 realization forever.
+
+    * neighbor-schedule topologies: one jit per distinct (self_w, shifts)
+      tuple -- at most tau distinct realizations, each with its static
+      shifts lowered to ppermute HLO.
+    * dense time-varying topologies (random_match): ONE jit taking the
+      realized W^{(k)} as a traced argument, fed per step.
+    * static topologies: one jit.
+    """
     opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta)
     step_fn = steps_mod.make_train_step(cfg, opt, micro_batch=micro_batch)
-    # one compiled function per gossip phase (static shifts => ppermute HLO)
-    period = topology.period if topology.period < 64 else 1
-    compiled = [jax.jit(lambda p, s, b, lr, k=k: step_fn(k, p, s, b, lr))
-                for k in range(max(period, 1))]
-    return opt, compiled, max(period, 1)
+    cache: dict = {}
+
+    if topology.neighbor_schedule is None and topology.time_varying:
+        jitted = jax.jit(
+            lambda p, s, b, lr, W: step_fn(0, p, s, b, lr, W_override=W))
+
+        def step_for(step: int):
+            if step < opt.warmup_steps:
+                # warm-up ignores W^{(k)} (update() drops W_override), so
+                # the W-as-argument executable would bake warm-up behavior
+                # in; compile warm-up steps via the static-step route.
+                return _static_step(step)
+            W = jnp.asarray(topology.weights(step), jnp.float32)
+            return lambda p, s, b, lr: jitted(p, s, b, lr, W)
+
+        def _static_step(step: int):
+            key = ("warmup", True)
+            if key not in cache:
+                cache[key] = jax.jit(
+                    lambda p, s, b, lr, k=int(step): step_fn(k, p, s, b, lr))
+            return cache[key]
+
+        return opt, step_for
+
+    def step_for(step: int):
+        # update() behaves differently during the all-reduce warm-up, so
+        # the phase is part of the key (a warm-up-compiled executable must
+        # not serve post-warm-up steps, and vice versa).
+        warm = step < opt.warmup_steps
+        if topology.neighbor_schedule is not None:
+            self_w, shifts = topology.neighbor_schedule(step)
+            key = (warm, self_w, tuple(shifts))
+        else:
+            key = (warm, "static")
+        if key not in cache:
+            cache[key] = jax.jit(
+                lambda p, s, b, lr, k=int(step): step_fn(k, p, s, b, lr))
+        return cache[key]
+
+    return opt, step_for
 
 
 def consensus_distance(params) -> float:
@@ -51,8 +102,8 @@ def run(args) -> dict:
         cfg = configs.reduced_config(cfg)
     n = args.nodes
     top = topo_mod.get_topology(args.topology, n)
-    opt, compiled, period = build_trainer(cfg, top, args.optimizer, args.beta,
-                                          args.micro_batch)
+    opt, step_for = build_trainer(cfg, top, args.optimizer, args.beta,
+                                  args.micro_batch)
 
     from repro.models import model as M
     params = M.init(cfg, jax.random.key(args.seed))
@@ -81,8 +132,7 @@ def run(args) -> dict:
                 jax.random.key(step), (n, args.batch, cfg.n_image_tokens,
                                        cfg.d_model), jnp.float32)
         lr = lr_fn(step)
-        stacked, state, loss = compiled[step % period](stacked, state, batch,
-                                                       lr)
+        stacked, state, loss = step_for(step)(stacked, state, batch, lr)
         if step % args.log_every == 0 or step == args.steps - 1:
             cd = consensus_distance(stacked)
             history.append(dict(step=step, loss=float(loss), consensus=cd,

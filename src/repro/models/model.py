@@ -61,6 +61,15 @@ class ModelConfig:
     n_experts: int = 0
     top_k: int = 0
     capacity_factor: float = 1.25
+    # dropless=True: exact batch-invariant expert mixture (serving; decode
+    # matches prefill bit-for-bit).  The train step flips this off to use
+    # the GShard capacity dispatch (active-param FLOPs, overflow drops).
+    # Governs forward() only: decode_step is ALWAYS dropless by design --
+    # capacity drops depend on co-batched tokens, so a capacity decode
+    # would be non-deterministic per request and can never reproduce any
+    # prefill; with moe_dropless=False, forward() is the (drop-lossy)
+    # training objective and decode intentionally diverges from it.
+    moe_dropless: bool = True
     # ssm / hybrid
     d_state: int = 0
     ssm_head_dim: int = 64
@@ -230,7 +239,8 @@ def _dense_block(cfg: ModelConfig, p, x, positions, is_local, aux):
     if "moe" in p:
         h, aux_l = moe_mod.moe_apply(p["moe"], h, n_experts=cfg.n_experts,
                                      top_k=cfg.top_k,
-                                     capacity_factor=cfg.capacity_factor)
+                                     capacity_factor=cfg.capacity_factor,
+                                     dropless=cfg.moe_dropless)
         aux = aux + aux_l
     else:
         h = mlp_apply(p["mlp"], h, cfg.mlp_kind)
@@ -465,9 +475,11 @@ def decode_step(params: PyTree, cfg: ModelConfig, token, cache: PyTree, idx,
         x = x + h
         h = rms_norm(p["ln2"], x, cfg.norm_eps)
         if "moe" in p:
+            # decode is always dropless: a capacity drop here would make a
+            # token's logits depend on co-batched requests (and diverge
+            # from prefill).
             h, _ = moe_mod.moe_apply(p["moe"], h, n_experts=cfg.n_experts,
-                                     top_k=cfg.top_k,
-                                     capacity_factor=cfg.capacity_factor)
+                                     top_k=cfg.top_k, dropless=True)
         else:
             h = mlp_apply(p["mlp"], h, cfg.mlp_kind)
         return x + h, kvc

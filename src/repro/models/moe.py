@@ -1,15 +1,27 @@
-"""Mixture-of-Experts FFN with top-k routing and fixed-capacity dispatch.
+"""Mixture-of-Experts FFN with top-k routing: dropless + capacity dispatch.
 
-Sort-based grouped dispatch (GShard/Switch-style capacity, dropless up to the
-capacity factor): tokens are argsorted by expert assignment, each expert
-processes a fixed ``capacity`` slice, outputs are scattered back weighted by
-the (renormalized) router gates.  Compute is proportional to *active*
-parameters (top_k / n_experts of the dense-equivalent), which keeps the
-roofline's MODEL_FLOPS = 6 * N_active * D meaningful.
+Two algebraically distinct dispatch modes:
+
+* ``dropless=True`` (inference default): every token is processed by ALL of
+  its top-k experts via a scan over the stacked expert weights --
+  ``y_t = sum_k gate_tk * FFN_{e_tk}(x_t)``.  Each token's output depends
+  only on that token, so the path is **batch-invariant and causal**:
+  token-by-token decode reproduces full-sequence prefill bit-for-bit.
+  Compute is E/k times the active-parameter FLOPs, memory stays at one
+  dense FFN's activations (the scan carries only the (T, d) accumulator).
+
+* ``dropless=False`` (training): GShard/Switch-style sort-based grouped
+  dispatch with a fixed per-expert ``capacity``; overflow tokens are
+  dropped.  Compute is proportional to *active* parameters
+  (top_k / n_experts of the dense-equivalent), which keeps the roofline's
+  MODEL_FLOPS = 6 * N_active * D meaningful.  NOTE: which tokens overflow
+  depends on every other token in the batchxsequence, so this path is
+  neither causal nor batch-invariant -- it must never serve decode (a
+  token's logits would depend on its co-batched requests).
 
 Expert weights are stacked on a leading expert axis -- sharded over the
-``model`` mesh axis (expert parallelism); the dispatch gather/scatter lowers
-to all-to-all under GSPMD.
+``model`` mesh axis (expert parallelism); the capacity dispatch
+gather/scatter lowers to all-to-all under GSPMD.
 """
 from __future__ import annotations
 
@@ -32,17 +44,8 @@ def moe_init(key, d_model: int, d_ff: int, n_experts: int,
     }
 
 
-def moe_apply(params, x, *, n_experts: int, top_k: int,
-              capacity_factor: float = 1.25):
-    """x: (B, S, d) -> (B, S, d), plus auxiliary load-balance loss.
-
-    Returns (y, aux_loss)."""
-    B, S, d = x.shape
-    T = B * S
-    xf = x.reshape(T, d)
-    dt = x.dtype
-
-    # --- routing -----------------------------------------------------------
+def _route(params, xf, n_experts: int, top_k: int):
+    """Shared router: per-token top-k gates + Switch load-balance loss."""
     logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
                         params["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
@@ -54,6 +57,53 @@ def moe_apply(params, x, *, n_experts: int, top_k: int,
         jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.float32).sum(1), 0)
     mean_probs = probs.mean(axis=0)
     aux_loss = n_experts * jnp.sum(density / top_k * mean_probs)
+    return gate_vals, expert_idx, aux_loss
+
+
+def _moe_dropless(params, xf, dt, *, n_experts: int, top_k: int):
+    """Exact per-token mixture: scan over experts, accumulate gated FFN.
+
+    Peak activation memory is one expert's (T, d_ff) intermediate -- the
+    same as a dense FFN -- at E/k times the active FLOPs.  Used for
+    serving, where batch-invariance is a correctness requirement."""
+    T, d = xf.shape
+    gate_vals, expert_idx, aux_loss = _route(params, xf, n_experts, top_k)
+    # (T, E) combine weights: gate mass of each expert for each token
+    combine = jnp.zeros((T, n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(T)[:, None], expert_idx].add(gate_vals)
+
+    def body(acc, per_expert):
+        wg, wu, wd, ce = per_expert            # (d,f),(d,f),(f,d),(T,)
+        g = xf @ wg.astype(dt)
+        u = xf @ wu.astype(dt)
+        ye = (jax.nn.silu(g) * u) @ wd.astype(dt)
+        return acc + ce[:, None] * ye.astype(jnp.float32), None
+
+    acc0 = jnp.zeros((T, d), jnp.float32)
+    y, _ = jax.lax.scan(
+        body, acc0,
+        (params["w_gate"], params["w_up"], params["w_down"], combine.T))
+    return y, aux_loss
+
+
+def moe_apply(params, x, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, dropless: bool = True):
+    """x: (B, S, d) -> (B, S, d), plus auxiliary load-balance loss.
+
+    Returns (y, aux_loss).  See module docstring for the two dispatch
+    modes; ``dropless=True`` is the batch-invariant serving path,
+    ``dropless=False`` the capacity-bounded training path."""
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    dt = x.dtype
+
+    if dropless:
+        y, aux_loss = _moe_dropless(params, xf, dt, n_experts=n_experts,
+                                    top_k=top_k)
+        return y.reshape(B, S, d).astype(dt), aux_loss
+
+    gate_vals, expert_idx, aux_loss = _route(params, xf, n_experts, top_k)
 
     # --- capacity-bounded grouped dispatch ----------------------------------
     A = T * top_k

@@ -12,6 +12,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess XLA compiles, minutes per case
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

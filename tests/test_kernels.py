@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.gossip_mix import ops as gm_ops, ref as gm_ref

@@ -9,6 +9,8 @@ import pytest
 from repro.core import optim, topology
 from repro.core.schedule import theory_lr
 
+pytestmark = pytest.mark.slow  # thousands-of-step convergence loops
+
 
 def _quadratic_problem(n, d, seed=0, hetero=1.0):
     """Per-node quadratic f_i(x) = 0.5 ||A_i x - b_i||^2; global min known."""
