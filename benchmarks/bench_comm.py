@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import flatbuf, gossip, spectral, topology
+from repro.core.plan import GossipPlan
 
 from .common import emit, time_fn
 
@@ -57,7 +58,10 @@ def run(n: int = 16) -> None:
         rounds = spec["rounds"]
         # same packed-layout accounting for both kinds; x2 = x + momentum
         bytes_per_iter = spec["bytes_per_node_per_step"] * 2
-        us = time_fn(lambda t=tree, tp=top: gossip.mix(t, tp, 0), iters=5)
+        # GossipPlan resolves step 0's realization into a mixing executor
+        # (the same resolution the train path compiles through).
+        mix0 = GossipPlan(top).mix(0)
+        us = time_fn(lambda t=tree, m=mix0: m(t), iters=5)
         W = top.weights(0)
         gap = spectral.spectral_gap(W) if not top.time_varying else float("nan")
         if name == "one_peer_exp":
@@ -121,7 +125,9 @@ def engine_compare_spmd(nn: int = 8) -> None:
     for name in ["one_peer_exp", "static_exp"]:
         top = topology.get_topology(name, nn)
         self_w, shifts = top.neighbor_schedule(0)
-        flat_fn = jax.jit(lambda t: gossip.mix_shifts(t, self_w, shifts),
+        # flat/production path through the plan's realization resolution
+        mix0 = GossipPlan(top).mix(0)
+        flat_fn = jax.jit(lambda t: mix0(t),
                           in_shardings=(shard,), out_shardings=shard)
         leaf_fn = jax.jit(
             lambda t: gossip.mix_shifts_per_leaf(t, self_w, shifts),

@@ -5,18 +5,25 @@ shard, exchanging (params, momentum) with ONE peer per step (Algorithm 1 of
 the paper).  Prints loss, consensus distance, and validates the Lemma-1
 exact-averaging property on the live parameter pytree.
 
+Uses the composable-optimizer API: the optimizer is a ``chain(...)`` of
+transforms (``repro.core.optim.dmsgd``) and the per-step compiled
+executables come from a ``GossipPlan``, which keys its jit cache by gossip
+REALIZATION (so aperiodic schedules would work identically).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import math
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import gossip, optim, topology
+from repro.core import optim, topology
+from repro.core.plan import GossipPlan
 from repro.data import SyntheticLM
 from repro.launch import steps as steps_mod
+from repro.launch.train import consensus_distance
 from repro.models import model as M
 from repro import configs
+import jax
 
 N_NODES = 8
 STEPS = 60
@@ -30,32 +37,31 @@ def main():
     stacked = jax.tree.map(
         lambda p: jnp.broadcast_to(p, (N_NODES,) + p.shape), params)
 
-    # 2) One-peer exponential graph + DmSGD (Algorithm 1).
+    # 2) One-peer exponential graph + DmSGD (Algorithm 1), compiled through
+    #    a GossipPlan: one executable per distinct gossip realization.
     top = topology.one_peer_exponential(N_NODES)
     opt = optim.dmsgd(top, beta=0.9)
     state = opt.init(stacked)
-    step_fn = steps_mod.make_train_step(cfg, opt)
-    jitted = [jax.jit(lambda p, s, b, lr, k=k: step_fn(k, p, s, b, lr))
-              for k in range(top.period)]
+    plan = GossipPlan.for_optimizer(opt, fn=steps_mod.make_train_step(cfg, opt))
 
     # 3) Heterogeneous per-node data (Assumption A.3 with b > 0).
     data = SyntheticLM(cfg.vocab_size, N_NODES, hetero=0.5, seed=0)
 
     for step in range(STEPS):
         batch = {"tokens": jnp.asarray(data.sample(step, 2, 32))}
-        stacked, state, loss = jitted[step % top.period](
+        stacked, state, loss = plan.step_fn(step)(
             stacked, state, batch, jnp.asarray(0.02, jnp.float32))
         if step % 10 == 0:
-            cd = sum(float(jnp.sum((l.astype(jnp.float32)
-                                    - l.astype(jnp.float32).mean(0)) ** 2))
-                     for l in jax.tree.leaves(stacked)) ** 0.5
+            cd = consensus_distance(stacked)
             print(f"step {step:3d}  loss {float(loss):.4f}  consensus {cd:.3e}")
+    print(f"(compiled {plan.num_compiled} executables for "
+          f"{top.period} gossip realizations)")
 
     # 4) Lemma 1 live: tau consecutive one-peer gossips == exact averaging.
     tau = int(math.log2(N_NODES))
     mixed = stacked
     for k in range(tau):
-        mixed = gossip.mix(mixed, top, k)
+        mixed = plan.mix(k)(mixed)
     err = max(float(jnp.abs(l.astype(jnp.float32)
                             - l.astype(jnp.float32).mean(0)).max())
               for l in jax.tree.leaves(mixed))

@@ -49,8 +49,9 @@ def make_cfg(preset: str) -> ModelConfig:
 def train_one(cfg, topname, *, nodes, steps, batch, seq, lr0, hetero, seed):
     top = (topology.full_averaging(nodes) if topname == "parallel"
            else topology.get_topology(topname, nodes))
-    # realization-keyed compile cache (see launch.train.build_trainer):
-    # works for aperiodic schedules too, unlike a step % period table.
+    # build_trainer wires optimizer + train step into a GossipPlan, whose
+    # realization-keyed compile cache works for aperiodic schedules too
+    # (unlike a step % period table).
     opt, step_for = build_trainer(
         cfg, top, "parallel_msgd" if topname == "parallel" else "dmsgd", 0.9)
     params = M.init(cfg, jax.random.key(seed))

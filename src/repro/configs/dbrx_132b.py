@@ -4,8 +4,6 @@
 MoE 16 experts top-4.  Momentum kept in bf16 to fit 16 GB/chip HBM at
 nodes=4 x fsdp=4 x model=16 (see DESIGN §4).
 """
-import jax.numpy as jnp
-
 from repro.models.model import ModelConfig
 
 CONFIG = ModelConfig(

@@ -3,8 +3,6 @@
 48L d_model=2048 (attention-free) vocab=50280, ssm_state=128.
 Mamba-2 1.3B card: expand=2 (d_inner 4096), headdim=64, ngroups=1, d_conv=4.
 """
-import jax.numpy as jnp
-
 from repro.models.model import ModelConfig
 
 CONFIG = ModelConfig(

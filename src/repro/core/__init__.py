@@ -1,9 +1,12 @@
 """Core: the paper's contribution — exponential-graph decentralized training.
 
 Subsystems: topology (weight matrices), spectral (Prop. 1 analysis), gossip
-(partial averaging → collective-permute), optim (DmSGD & variants, Alg. 1),
-schedule (lr protocol).
+(partial averaging → collective-permute), transforms (composable optimizer
+algebra), optim (DmSGD & variants as chains, Alg. 1), plan (GossipPlan:
+schedule-aware realization resolution + compile cache), schedule (lr
+protocol).
 """
-from . import gossip, optim, schedule, spectral, topology  # noqa: F401
+from . import gossip, optim, plan, schedule, spectral, topology, transforms  # noqa: F401
 from .optim import make_optimizer  # noqa: F401
+from .plan import CompileCache, GossipPlan  # noqa: F401
 from .topology import Topology, get_topology  # noqa: F401

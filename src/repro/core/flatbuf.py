@@ -89,7 +89,7 @@ def layout_of(tree: PyTree) -> FlatLayout:
     if not leaves:
         raise ValueError("cannot pack an empty pytree")
     key = (treedef,
-           tuple((jnp.dtype(l.dtype).name, tuple(l.shape)) for l in leaves))
+           tuple((jnp.dtype(x.dtype).name, tuple(x.shape)) for x in leaves))
     hit = _LAYOUT_CACHE.get(key)
     if hit is not None:
         return hit
@@ -99,7 +99,7 @@ def layout_of(tree: PyTree) -> FlatLayout:
         if leaf.ndim == 0 or leaf.shape[0] != n:
             raise ValueError(
                 "every gossip leaf needs the same leading node axis; got "
-                f"shapes {[tuple(l.shape) for l in leaves]}")
+                f"shapes {[tuple(x.shape) for x in leaves]}")
 
     by_dtype: dict = {}
     for i, leaf in enumerate(leaves):

@@ -1,42 +1,64 @@
-"""Decentralized (momentum) SGD optimizers over a stacked node axis.
+"""Decentralized optimizers as one-line compositions of transforms.
 
-Implements, as pure functional transforms over pytrees whose leaves carry a
-leading node axis of size ``n``:
+Every optimizer here is a :func:`repro.core.transforms.chain` over the
+shared transform algebra -- the schedule machinery (which ``W^{(k)}`` to
+apply, warm-up phases, traced vs. static steps, compile caching) lives in
+:class:`repro.core.plan.GossipPlan`, NOT in the optimizers.  Iterates are
+pytrees whose leaves carry a leading node axis of size ``n``.
 
 * ``dmsgd``        -- Algorithm 1 (Yu-Jin-Yang variant [64] used by the paper):
                         m^{k+1} = W^{(k)} (beta m^k + g^k)
                         x^{k+1} = W^{(k)} (x^k - gamma m^k)
-                      NOTE: both mixings share W^{(k)}, so the production path
-                      fuses them into ONE gossip round over the concatenated
-                      (beta m + g, x - gamma m) payload.
+                      One ``gossip(where=("m_next", "x_next"))`` mixes both
+                      with the same W^{(k)}: the payload packs into ONE flat
+                      f32 buffer, so one-peer exponential costs exactly one
+                      collective-permute per step.
 * ``dsgd``         -- DmSGD with beta = 0 (Remark 8).
-* ``vanilla_dmsgd``-- [3]: momentum is NOT exchanged:
-                        m^{k+1} = beta m^k + g^k
-                        x^{k+1} = W^{(k)} (x^k - gamma m^{k+1})
-* ``qg_dmsgd``     -- quasi-global momentum [32] (Lin et al. 2021):
-                        x^{k+1} = W^{(k)} (x^k - gamma (g^k + mu m^k))
-                        m^{k+1} = mu m^k + (1 - mu) (x^k - x^{k+1}) / gamma
-                      (EMA of the quasi-global displacement; no momentum
-                      gossip -- the buffer tracks the *averaged* trajectory).
-* ``parallel_msgd``-- global averaging baseline (W = (1/n)11^T every step,
-                      realized with a mean over the node axis == all-reduce).
+* ``vanilla_dmsgd``-- [3]: momentum is NOT exchanged (only ``x_next`` is
+                      gossiped; descent uses the freshly traced momentum).
+* ``qg_dmsgd``     -- quasi-global momentum [32]: no momentum gossip; the
+                      buffer EMAs the quasi-global displacement AFTER the
+                      ``x_next`` mix, tracking the averaged trajectory.
+* ``parallel_msgd``-- global averaging baseline: ``average_gradients()``
+                      (mean over the node axis == all-reduce when sharded),
+                      paper's averaged-recursion convention (eqs. 50-51).
+* ``d_adamw``      -- beyond-paper: decentralized AdamW whose first/second
+                      moments are gossiped WITH the params in one payload
+                      (three f32 trees -> still one dtype group -> still one
+                      collective-permute over one-peer exponential).
 
-All satisfy: applying the optimizer with ``full_averaging`` topology makes
-every node's iterate equal to parallel momentum SGD on the averaged gradient.
+All SGD-family optimizers satisfy: with the ``full_averaging`` topology,
+every node's iterate equals parallel momentum SGD on the averaged gradient.
+
+Momentum/moment dtype is an explicit argument (``momentum_dtype=...``,
+threaded from each arch's layout config, e.g. dbrx-132b's bf16) -- the old
+process-global ``set_momentum_dtype`` knob is gone.  :func:`make_optimizer`
+survives as a thin deprecation shim: the legacy ``traced_step`` /
+``warmup_allreduce_steps`` kwargs map onto the new mechanisms (step-type
+dispatch and :func:`~repro.core.transforms.allreduce_warmup`) with a
+``DeprecationWarning``; ``W_override`` is gone -- dense time-varying
+schedules go through ``GossipPlan``'s traced-``W`` executable.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from . import gossip
 from .topology import Topology, full_averaging
-
-PyTree = Any
+from .transforms import (
+    OptState,
+    DecentralizedOptimizer,
+    adam_descent,
+    allreduce_warmup,
+    average_gradients,
+    chain,
+    gossip,
+    quantize_int8,
+    quasi_global_momentum,
+    scale_by_lr,
+    trace_adam_moments,
+    trace_momentum,
+)
 
 __all__ = [
     "OptState",
@@ -46,206 +68,82 @@ __all__ = [
     "vanilla_dmsgd",
     "qg_dmsgd",
     "parallel_msgd",
+    "d_adamw",
     "make_optimizer",
     "OPTIMIZERS",
 ]
 
 
-class OptState(NamedTuple):
-    momentum: PyTree   # same structure/shape as params (leading node axis)
-    count: jax.Array   # scalar int32 step counter
-
-
-@dataclasses.dataclass(frozen=True)
-class DecentralizedOptimizer:
-    """(init_fn, update_fn) pair.
-
-    ``update(params, state, grads, step, lr, W_override=None)`` returns
-    (new_params, new_state).  ``step`` must be a *static* Python int when
-    the topology is time-varying and the sparse gossip path is desired (the
-    launcher compiles one step function per distinct gossip realization);
-    pass ``traced_step=True`` at construction to use the lax.switch path
-    with a traced step instead (periodic schedules only).  For dense
-    APERIODIC topologies (random_match) pass the realized ``W^{(k)}`` as
-    ``W_override`` -- a traced argument -- so one compiled step serves the
-    whole schedule.
-    """
-
-    name: str
-    topology: Topology
-    beta: float
-    init: Callable[[PyTree], OptState]
-    update: Callable[..., tuple[PyTree, OptState]]
-    # steps of exact all-reduce warm-up (Corollary 3); update() behaves
-    # differently while int(step) < warmup_steps, so realization-keyed
-    # compile caches must fold the warm-up phase into their key.
-    warmup_steps: int = 0
-
-
-def _zeros_like_tree(params: PyTree) -> PyTree:
-    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=_mom_dtype(p)), params)
-
-
-_MOMENTUM_DTYPE: dict[str, Any] = {"dtype": None}
-
-
-def _mom_dtype(p):
-    return _MOMENTUM_DTYPE["dtype"] or p.dtype
-
-
-def set_momentum_dtype(dtype) -> None:
-    """Global knob: store momentum in e.g. bf16 (used for dbrx-132b HBM fit)."""
-    _MOMENTUM_DTYPE["dtype"] = dtype
-
-
-def _mix(tree: PyTree, topology: Topology, step, traced: bool,
-         compression: str | None = None, W_override=None) -> PyTree:
-    if W_override is not None:
-        # Dense time-varying topologies (random_match) feed W^{(k)} as a
-        # traced ARGUMENT so one compiled step serves every realization --
-        # baking W in as a constant would freeze the schedule (or force a
-        # recompile per step).
-        return gossip.mix_dense(tree, W_override)
-    if traced:
-        return gossip.mix_switch(tree, topology, step)
-    return gossip.mix(tree, topology, int(step), compression)
-
-
-def dmsgd(topology: Topology, beta: float = 0.9,
-          traced_step: bool = False,
-          warmup_allreduce_steps: int = 0,
+def dmsgd(topology: Topology, beta: float = 0.9, *, momentum_dtype=None,
           compression: str | None = None) -> DecentralizedOptimizer:
-    """Algorithm 1 (paper's DmSGD).
-
-    warmup_allreduce_steps: Corollary 3's warm-up — use exact global
-    averaging (W = (1/n)11^T) for the first tau-ish steps so the initial
-    consensus residue sum_{k<tau} ||x - x_bar||^2 vanishes from the bound.
-    Static-step path only (the launcher compiles per-phase functions).
-    """
-
-    def init(params: PyTree) -> OptState:
-        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
-
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
-               W_override=None):
-        m, x = state.momentum, params
-        # Fused single gossip round: mix (beta m + g) and (x - gamma m)
-        # with the same W^{(k)}.  Both pre-trees are f32, so the flat-buffer
-        # engine packs the whole payload into ONE (n, 2P) buffer -- the
-        # one-peer exponential step is literally one collective-permute.
-        pre_m = jax.tree.map(
-            lambda mi, gi: (beta * mi.astype(jnp.float32)
-                            + gi.astype(jnp.float32)), m, grads)
-        pre_x = jax.tree.map(
-            lambda xi, mi: xi.astype(jnp.float32) - lr * mi.astype(jnp.float32),
-            x, m)
-        top_k = topology
-        if (warmup_allreduce_steps and not traced_step
-                and int(step) < warmup_allreduce_steps):
-            top_k = full_averaging(topology.n)
-            W_override = None  # warm-up supersedes the realized W^{(k)}
-        mixed_m, mixed_x = _mix((pre_m, pre_x), top_k, step, traced_step,
-                                compression, W_override)
-        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), mixed_m, m)
-        new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, x)
-        return new_x, OptState(new_m, state.count + 1)
-
-    return DecentralizedOptimizer("dmsgd", topology, beta, init, update,
-                                  warmup_steps=warmup_allreduce_steps)
+    """Algorithm 1 (paper's DmSGD); fused single-payload gossip."""
+    return chain(
+        trace_momentum(beta, dtype=momentum_dtype),
+        scale_by_lr("m"),
+        quantize_int8() if compression == "int8" else None,
+        gossip(where=("m_next", "x_next")),
+        topology=topology, name="dmsgd", beta=beta)
 
 
-def dsgd(topology: Topology, traced_step: bool = False) -> DecentralizedOptimizer:
+def dsgd(topology: Topology, *, momentum_dtype=None,
+         compression: str | None = None) -> DecentralizedOptimizer:
     """Decentralized SGD = DmSGD with beta = 0 (Remark 8)."""
-    opt = dmsgd(topology, beta=0.0, traced_step=traced_step)
+    opt = dmsgd(topology, beta=0.0, momentum_dtype=momentum_dtype,
+                compression=compression)
     return dataclasses.replace(opt, name="dsgd")
 
 
-def vanilla_dmsgd(topology: Topology, beta: float = 0.9,
-                  traced_step: bool = False) -> DecentralizedOptimizer:
+def vanilla_dmsgd(topology: Topology, beta: float = 0.9, *,
+                  momentum_dtype=None,
+                  compression: str | None = None) -> DecentralizedOptimizer:
     """Vanilla DmSGD [3]: no momentum exchange."""
-
-    def init(params: PyTree) -> OptState:
-        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
-
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
-               W_override=None):
-        new_m = jax.tree.map(
-            lambda mi, gi: beta * mi.astype(jnp.float32) + gi.astype(jnp.float32),
-            state.momentum, grads)
-        pre_x = jax.tree.map(
-            lambda xi, mi: xi.astype(jnp.float32) - lr * mi, params, new_m)
-        mixed_x = _mix(pre_x, topology, step, traced_step,
-                       W_override=W_override)
-        new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, params)
-        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m,
-                             state.momentum)
-        return new_x, OptState(new_m, state.count + 1)
-
-    return DecentralizedOptimizer("vanilla_dmsgd", topology, beta, init, update)
+    return chain(
+        trace_momentum(beta, dtype=momentum_dtype),
+        scale_by_lr("m_next"),
+        quantize_int8() if compression == "int8" else None,
+        gossip(where=("x_next",)),
+        topology=topology, name="vanilla_dmsgd", beta=beta)
 
 
-def qg_dmsgd(topology: Topology, beta: float = 0.9,
-             traced_step: bool = False) -> DecentralizedOptimizer:
+def qg_dmsgd(topology: Topology, beta: float = 0.9, *, momentum_dtype=None,
+             compression: str | None = None) -> DecentralizedOptimizer:
     """QG-DmSGD [32]: quasi-global momentum tracks the averaged trajectory."""
-
-    def init(params: PyTree) -> OptState:
-        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
-
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
-               W_override=None):
-        m = state.momentum
-        pre_x = jax.tree.map(
-            lambda xi, gi, mi: xi.astype(jnp.float32)
-            - lr * (gi.astype(jnp.float32) + beta * mi.astype(jnp.float32)),
-            params, grads, m)
-        mixed_x = _mix(pre_x, topology, step, traced_step,
-                       W_override=W_override)
-        # quasi-global momentum: m <- beta m + (1-beta) (x^k - x^{k+1}) / lr
-        new_m = jax.tree.map(
-            lambda mi, xi, xn: (beta * mi.astype(jnp.float32)
-                                + (1.0 - beta)
-                                * (xi.astype(jnp.float32) - xn) / lr),
-            m, params, mixed_x)
-        new_x = jax.tree.map(lambda a, b: a.astype(b.dtype), mixed_x, params)
-        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m, m)
-        return new_x, OptState(new_m, state.count + 1)
-
-    return DecentralizedOptimizer("qg_dmsgd", topology, beta, init, update)
+    return chain(
+        trace_momentum(beta, dtype=momentum_dtype, out="qg_dir"),
+        scale_by_lr("qg_dir"),
+        quantize_int8() if compression == "int8" else None,
+        gossip(where=("x_next",)),
+        quasi_global_momentum(beta),
+        topology=topology, name="qg_dmsgd", beta=beta)
 
 
-def parallel_msgd(n: int, beta: float = 0.9) -> DecentralizedOptimizer:
-    """Parallel momentum SGD: exact global averaging of gradients every step
-    (the All-Reduce baseline).  Realized as a mean over the node axis, which
-    GSPMD lowers to all-reduce when the axis is sharded.
+def parallel_msgd(n: int, beta: float = 0.9, *,
+                  momentum_dtype=None) -> DecentralizedOptimizer:
+    """Parallel momentum SGD: exact global gradient averaging every step
+    (the All-Reduce baseline), paper's averaged-recursion convention
+    (eqs. 50-51): x^{k+1} = x^k - gamma m^k (OLD momentum),
+    m^{k+1} = beta m^k + g_avg^k."""
+    return chain(
+        average_gradients(),
+        scale_by_lr("m"),
+        trace_momentum(beta, dtype=momentum_dtype),
+        topology=full_averaging(n), name="parallel_msgd", beta=beta)
 
-    Uses the paper's averaged-recursion convention (eqs. 50-51):
-      x^{k+1} = x^k - gamma m^k   (OLD momentum),
-      m^{k+1} = beta m^k + g_avg^k
-    so DmSGD with W = (1/n)11^T reproduces it iterate-for-iterate."""
 
-    top = full_averaging(n)
-
-    def init(params: PyTree) -> OptState:
-        return OptState(_zeros_like_tree(params), jnp.zeros((), jnp.int32))
-
-    def update(params: PyTree, state: OptState, grads: PyTree, step, lr,
-               W_override=None):
-        g_avg = jax.tree.map(
-            lambda g: jnp.broadcast_to(
-                jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True), g.shape),
-            grads)
-        new_x = jax.tree.map(
-            lambda xi, mi: (xi.astype(jnp.float32)
-                            - lr * mi.astype(jnp.float32)).astype(xi.dtype),
-            params, state.momentum)
-        new_m = jax.tree.map(
-            lambda mi, gi: beta * mi.astype(jnp.float32) + gi,
-            state.momentum, g_avg)
-        new_m = jax.tree.map(lambda a, b: a.astype(_mom_dtype(b)), new_m,
-                             state.momentum)
-        return new_x, OptState(new_m, state.count + 1)
-
-    return DecentralizedOptimizer("parallel_msgd", top, beta, init, update)
+def d_adamw(topology: Topology, b1: float = 0.9, b2: float = 0.999, *,
+            eps: float = 1e-8, weight_decay: float = 0.0,
+            momentum_dtype=None,
+            compression: str | None = None) -> DecentralizedOptimizer:
+    """Decentralized AdamW (beyond-paper): both Adam moments are gossiped
+    together with the params.  The three f32 trees share one flat-buffer
+    dtype group, so one-peer exponential still costs ONE collective-permute
+    per step -- the transform algebra makes new optimizers ~free."""
+    return chain(
+        trace_adam_moments(b1, b2, dtype=momentum_dtype),
+        adam_descent(eps=eps, weight_decay=weight_decay),
+        quantize_int8() if compression == "int8" else None,
+        gossip(where=("mu_next", "nu_next", "x_next")),
+        topology=topology, name="d_adamw", beta=b1)
 
 
 OPTIMIZERS = {
@@ -253,15 +151,52 @@ OPTIMIZERS = {
     "dsgd": dsgd,
     "vanilla_dmsgd": vanilla_dmsgd,
     "qg_dmsgd": qg_dmsgd,
+    "d_adamw": d_adamw,
 }
 
 
 def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
-                   traced_step: bool = False) -> DecentralizedOptimizer:
+                   *, momentum_dtype=None, compression: str | None = None,
+                   traced_step: bool | None = None,
+                   warmup_allreduce_steps: int | None = None
+                   ) -> DecentralizedOptimizer:
+    """Name-keyed construction; also the DEPRECATION SHIM for the legacy
+    flag trifecta:
+
+    * ``traced_step`` is ignored (with a warning): ``update()`` now
+      dispatches on the step's type -- static Python int selects that
+      step's realization, a traced array takes the ``lax.switch`` path.
+    * ``warmup_allreduce_steps=tau`` maps to the
+      ``allreduce_warmup(tau)(opt)`` wrapping combinator.
+    * the old per-call ``W_override=`` argument is gone entirely: dense
+      time-varying schedules are served by ``GossipPlan``'s single
+      traced-``W`` executable.
+    """
     if name == "parallel_msgd":
-        return parallel_msgd(topology.n, beta=beta)
-    if name == "dsgd":
-        return dsgd(topology, traced_step=traced_step)
-    if name not in OPTIMIZERS:
-        raise KeyError(f"unknown optimizer {name!r}")
-    return OPTIMIZERS[name](topology, beta=beta, traced_step=traced_step)
+        opt = parallel_msgd(topology.n, beta=beta,
+                            momentum_dtype=momentum_dtype)
+    elif name == "dsgd":
+        opt = dsgd(topology, momentum_dtype=momentum_dtype,
+                   compression=compression)
+    elif name == "d_adamw":
+        opt = d_adamw(topology, b1=beta, momentum_dtype=momentum_dtype,
+                      compression=compression)
+    elif name in OPTIMIZERS:
+        opt = OPTIMIZERS[name](topology, beta=beta,
+                               momentum_dtype=momentum_dtype,
+                               compression=compression)
+    else:
+        raise KeyError(f"unknown optimizer {name!r}; "
+                       f"options: {sorted(OPTIMIZERS) + ['parallel_msgd']}")
+    if traced_step is not None:
+        warnings.warn(
+            "traced_step= is deprecated and ignored: update() dispatches on "
+            "the step type (python int -> static realization, traced array "
+            "-> lax.switch)", DeprecationWarning, stacklevel=2)
+    if warmup_allreduce_steps:
+        warnings.warn(
+            "warmup_allreduce_steps= is deprecated; use "
+            "transforms.allreduce_warmup(tau)(opt)",
+            DeprecationWarning, stacklevel=2)
+        opt = allreduce_warmup(warmup_allreduce_steps)(opt)
+    return opt

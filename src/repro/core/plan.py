@@ -1,0 +1,190 @@
+"""GossipPlan: unified schedule-aware realization resolution + compile cache.
+
+One object owns what used to live as three mutually exclusive flag paths
+(``traced_step`` / ``W_override`` / ``warmup_allreduce_steps``) plus a jit
+cache private to ``launch.train.build_trainer``.  A :class:`GossipPlan`
+classifies a :class:`~repro.core.topology.Topology` into one of three
+compile regimes and keys every executable by the gossip REALIZATION (never
+by ``step % period``, which froze aperiodic schedules):
+
+* ``"static"``  -- one realization forever (ring as dense, star, grid,
+  full): ONE compiled executable.
+* ``"neighbor"`` -- the topology exposes a ``neighbor_schedule`` (circulant
+  shift structure: ring, static/one-peer exponential, incl. the aperiodic
+  random one-peer schedules): one executable per distinct
+  ``(self_weight, shifts)`` tuple, each with its static shifts lowered to
+  collective-permute HLO.  At most ``tau`` distinct realizations even for
+  aperiodic orders.
+* ``"dense"``   -- time-varying dense matrices (random_match,
+  one_peer_hypercube): ONE executable taking the realized ``W^{(k)}`` as a
+  traced argument, fed per step -- baking ``W`` in would freeze the
+  schedule or force a recompile every step.
+
+The all-reduce warm-up phase (Corollary 3) is folded into the cache key:
+``realization_key(step) == ("warmup",)`` for ``step < warmup_steps``, so a
+warm-up-compiled executable can never serve post-warm-up steps or vice
+versa (the phases compute different things).
+
+Consumers hand the plan a step function of the form ``fn(mix, *args)``
+where ``mix`` is the realization-bound gossip executor (what
+``DecentralizedOptimizer.update_with_mix`` consumes); ``plan.step_fn(k)``
+returns the compiled callable for step ``k``'s realization and
+``plan.mix(k)`` the bare executor (for eager use, benchmarks, and dry-run
+lowering).  :class:`CompileCache` is the underlying keyed-jit cache, also
+used standalone (e.g. ``launch.serve`` caches its decode executable there).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import gossip
+from .topology import Topology, full_averaging
+
+PyTree = Any
+
+__all__ = ["CompileCache", "GossipPlan"]
+
+
+class CompileCache:
+    """Keyed build-once cache (typically: hashable key -> jitted fn)."""
+
+    def __init__(self):
+        self._cache: dict = {}
+
+    def get(self, key, build: Callable[[], Any]):
+        if key not in self._cache:
+            self._cache[key] = build()
+        return self._cache[key]
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def __contains__(self, key) -> bool:
+        return key in self._cache
+
+
+@dataclasses.dataclass
+class GossipPlan:
+    """Realization resolution + compile cache for one (topology, phase
+    schedule, compression) triple.
+
+    ``fn(mix, *args)`` is the function compiled per realization; bind it at
+    construction or via :meth:`bind`.  ``warmup_steps``/``compression``
+    normally come from the optimizer (see :meth:`for_optimizer`).
+    """
+
+    topology: Topology
+    warmup_steps: int = 0
+    compression: str | None = None
+    fn: Callable | None = None
+
+    def __post_init__(self):
+        self._cache = CompileCache()
+        if self.compression and self.regime != "neighbor":
+            # int8 wire quantization lives in the shift path
+            # (gossip.mix_shifts); dense-matrix mixing has no quantized
+            # implementation -- refuse rather than silently send f32.
+            raise ValueError(
+                f"compression={self.compression!r} needs a neighbor-schedule "
+                f"(shift-structured) topology; {self.topology.name!r} mixes "
+                f"via dense matrices ({self.regime} regime)")
+
+    @classmethod
+    def for_optimizer(cls, opt, fn: Callable | None = None) -> "GossipPlan":
+        """Plan matching a chain-built optimizer's topology, warm-up phase,
+        and wire compression."""
+        return cls(opt.topology, warmup_steps=opt.warmup_steps,
+                   compression=opt.compression, fn=fn)
+
+    def bind(self, fn: Callable) -> "GossipPlan":
+        """Same plan parameters with ``fn`` bound (fresh compile cache)."""
+        return dataclasses.replace(self, fn=fn)
+
+    # -- classification -------------------------------------------------------
+
+    @property
+    def regime(self) -> str:
+        if self.topology.neighbor_schedule is not None:
+            return "neighbor"
+        if self.topology.time_varying:
+            return "dense"
+        return "static"
+
+    def realization_key(self, step: int) -> tuple:
+        """Hashable compile-cache key for ``step``'s gossip realization."""
+        k = int(step)
+        if self.warmup_steps and k < self.warmup_steps:
+            return ("warmup",)
+        regime = self.regime
+        if regime == "neighbor":
+            self_w, shifts = self.topology.neighbor_schedule(k)
+            return ("neighbor", self_w, tuple(shifts))
+        if regime == "dense":
+            return ("dense",)
+        return ("static",)
+
+    @property
+    def num_compiled(self) -> int:
+        return len(self._cache)
+
+    # -- executors ------------------------------------------------------------
+
+    def mix(self, step: int) -> Callable[[PyTree], PyTree]:
+        """The bare gossip executor for ``step``'s realization (static:
+        every schedule decision is resolved here, outside any trace)."""
+        k = int(step)
+        if self.warmup_steps and k < self.warmup_steps:
+            top_full = full_averaging(self.topology.n)
+            return lambda t: gossip.mix(t, top_full, 0)
+        if self.regime == "neighbor":
+            self_w, shifts = self.topology.neighbor_schedule(k)
+            comp = self.compression
+            return lambda t: gossip.mix_shifts(t, self_w, shifts, comp)
+        W = jnp.asarray(self.topology.weights(k), jnp.float32)
+        return lambda t: gossip.mix_dense(t, W)
+
+    def _dense_executable(self):
+        """The dense regime's single jitted fn, taking the realized
+        ``W^{(k)}`` as its leading traced argument."""
+        fn = self._require_fn()
+        return self._cache.get(("dense",), lambda: jax.jit(
+            lambda W, *a: fn((lambda t: gossip.mix_dense(t, W)), *a)))
+
+    def _realized_W(self, step: int) -> jax.Array:
+        return jnp.asarray(self.topology.weights(int(step)), jnp.float32)
+
+    def step_fn(self, step: int) -> Callable:
+        """Compiled ``fn`` for ``step``'s realization.
+
+        Same realization -> the SAME executable (compiled once); the dense
+        regime returns a per-step wrapper feeding the realized ``W^{(k)}``
+        into one shared traced-``W`` executable."""
+        key = self.realization_key(step)
+        if key == ("dense",):
+            jitted = self._dense_executable()
+            W = self._realized_W(step)
+            return lambda *a: jitted(W, *a)
+        fn = self._require_fn()
+        mix = self.mix(step)
+        return self._cache.get(key, lambda: jax.jit(
+            lambda *a: fn(mix, *a)))
+
+    def lowered(self, step: int, *args):
+        """``jax.jit(...).lower(*args)`` for ``step``'s executable -- for
+        HLO inspection and dry-run cost analysis (args may be
+        ``ShapeDtypeStruct``s, carrying shardings if desired)."""
+        if self.realization_key(step) == ("dense",):
+            return self._dense_executable().lower(self._realized_W(step),
+                                                  *args)
+        return self.step_fn(step).lower(*args)
+
+    def _require_fn(self) -> Callable:
+        if self.fn is None:
+            raise ValueError(
+                "GossipPlan has no bound step function; construct with "
+                "fn=... or use plan.bind(fn)")
+        return self.fn

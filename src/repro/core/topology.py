@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Iterator, Sequence
+from typing import Callable, Iterator
 
 import numpy as np
 
@@ -117,7 +117,7 @@ def ring(n: int) -> Topology:
     w_off = W[0, 1]
     sched = None
     if n >= 3:
-        sched = lambda k: (1.0 - 2 * w_off, [(1, w_off), (-1, w_off)])
+        sched = lambda k: (1.0 - 2 * w_off, [(1, w_off), (-1, w_off)])  # noqa: E731
     return Topology("ring", n, 1, 2 if n >= 3 else max(n - 1, 0), lambda k: W,
                     neighbor_schedule=sched)
 

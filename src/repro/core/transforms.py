@@ -1,0 +1,403 @@
+"""Composable decentralized-optimizer transforms over node-stacked pytrees.
+
+An optax-style algebra for building decentralized (momentum) optimizers out
+of small, named steps instead of hand-fused monolithic closures.  Every
+quantity is a pytree whose leaves carry a leading node axis of size ``n``;
+a *transform* reads and writes named tensors in a :class:`Context` and a
+:func:`chain` of transforms becomes a :class:`DecentralizedOptimizer`.
+
+Naming convention inside a chain:
+
+* ``"x"`` -- current params (original dtypes), ``"g"`` -- this step's grads.
+* Each state slot appears under its name (``"m"``, ``"mu"``, ``"nu"``) and
+  the chain must produce ``"<slot>_next"`` for every slot plus ``"x_next"``;
+  commits cast back to the original leaf dtypes.
+
+Core transforms:
+
+* :func:`trace_momentum` -- ``m_next = beta * m + g`` (heavy-ball trace);
+  the momentum/moment **dtype is an explicit argument** (e.g. bf16 for the
+  dbrx-132b HBM fit) -- there is no process-global dtype knob.
+* :func:`scale_by_lr` -- ``x_next = x - lr * <momentum tensor>``.
+* :func:`gossip` -- marks WHICH intermediate tensors get partially averaged.
+  All tensors named in one ``gossip(where=...)`` are mixed as a single
+  pytree, so they pack into one flat buffer per dtype group
+  (:mod:`repro.core.flatbuf`): DmSGD's fused ``(beta m + g, x - gamma m)``
+  single-collective payload falls out of composition, not hand-fusion.
+* :func:`quantize_int8` -- declarative marker: gossip payloads are int8
+  quantized on the wire (QSGD-style, per-leaf-segment scales).
+* :func:`allreduce_warmup` -- wrapping combinator (Corollary 3): the first
+  ``tau`` steps mix with exact global averaging ``W = (1/n) 1 1^T``.
+* :func:`average_gradients`, :func:`quasi_global_momentum`,
+  :func:`trace_adam_moments`, :func:`adam_descent` -- the remaining pieces
+  needed for the paper's baselines and decentralized AdamW.
+
+The gossip *executor* is injected: ``opt.update_with_mix(..., mix=...)``
+takes the realization-bound mixing callable (one per distinct ``W^{(k)}``),
+which :class:`repro.core.plan.GossipPlan` resolves and caches.  The
+standalone ``opt.update(params, state, grads, step, lr)`` resolves it from
+the step itself: a static Python int selects that step's realization, a
+traced array takes the ``lax.switch`` path (periodic schedules only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gossip as gossip_mod
+from .topology import Topology
+
+PyTree = Any
+
+__all__ = [
+    "OptState",
+    "Context",
+    "Transform",
+    "DecentralizedOptimizer",
+    "chain",
+    "trace_momentum",
+    "scale_by_lr",
+    "gossip",
+    "quantize_int8",
+    "allreduce_warmup",
+    "average_gradients",
+    "quasi_global_momentum",
+    "trace_adam_moments",
+    "adam_descent",
+]
+
+
+class OptState(NamedTuple):
+    """Optimizer state.  ``momentum`` holds the single state slot's pytree
+    for one-slot chains (every SGD-family optimizer), or a ``{slot: pytree}``
+    dict for multi-slot chains (d_adamw's first/second moments)."""
+
+    momentum: PyTree
+    count: jax.Array   # scalar int32 step counter
+
+
+@dataclasses.dataclass
+class Context:
+    """Mutable step context a chain threads through its transforms."""
+
+    tensors: dict          # name -> node-stacked pytree
+    lr: Any                # scalar learning rate (traced or python float)
+    count: jax.Array       # steps completed so far (state.count)
+    mix: Callable[[PyTree], PyTree]   # realization-bound gossip executor
+
+
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    """One named step of a chain.
+
+    ``slots`` declares the state tensors this transform owns; ``init``
+    builds their initial values from the params pytree; ``apply`` reads and
+    writes ``ctx.tensors``.  ``tag`` carries declarative markers consumed at
+    chain-construction time (e.g. ``"int8"`` from :func:`quantize_int8`).
+    """
+
+    name: str
+    slots: tuple = ()
+    init: Callable[[PyTree], dict] | None = None
+    apply: Callable[[Context], None] | None = None
+    tag: str | None = None
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def _zeros_slot(params: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# Transform library
+# ---------------------------------------------------------------------------
+
+def trace_momentum(beta: float, dtype=None, *, slot: str = "m",
+                   out: str = "m_next") -> Transform:
+    """Heavy-ball momentum trace: ``out = beta * slot + g`` in f32.
+
+    ``dtype`` sets the stored momentum dtype explicitly (None keeps each
+    param leaf's dtype) -- this replaces the old process-global
+    ``set_momentum_dtype`` knob; e.g. dbrx-132b threads bf16 through here
+    from its layout config.
+    """
+
+    def init(params):
+        return {slot: _zeros_slot(params, dtype)}
+
+    def apply(ctx):
+        ctx.tensors[out] = jax.tree.map(
+            lambda mi, gi: beta * _f32(mi) + _f32(gi),
+            ctx.tensors[slot], ctx.tensors["g"])
+
+    return Transform(f"trace_momentum({beta})", (slot,), init, apply)
+
+
+def scale_by_lr(momentum: str = "m", *, out: str = "x_next") -> Transform:
+    """Descent step: ``out = x - lr * <momentum>`` in f32.
+
+    ``momentum="m"`` descends along the OLD momentum (Algorithm 1 /
+    parallel mSGD's averaged-recursion convention); ``momentum="m_next"``
+    uses the freshly traced one (vanilla DmSGD)."""
+
+    def apply(ctx):
+        ctx.tensors[out] = jax.tree.map(
+            lambda xi, mi: _f32(xi) - ctx.lr * _f32(mi),
+            ctx.tensors["x"], ctx.tensors[momentum])
+
+    return Transform(f"scale_by_lr({momentum})", (), None, apply)
+
+
+def gossip(where: tuple = ("x_next",)) -> Transform:
+    """Partially average the named tensors with this step's ``W^{(k)}``.
+
+    All tensors in one ``where`` tuple are mixed as a SINGLE pytree, so the
+    flat-buffer engine packs them into one buffer per dtype group: for f32
+    payloads over the one-peer exponential graph that is exactly ONE
+    collective-permute regardless of how many tensors are listed."""
+    where = tuple(where)
+
+    def apply(ctx):
+        if len(where) == 1:
+            ctx.tensors[where[0]] = ctx.mix(ctx.tensors[where[0]])
+            return
+        mixed = ctx.mix(tuple(ctx.tensors[k] for k in where))
+        for k, v in zip(where, mixed):
+            ctx.tensors[k] = v
+
+    return Transform(f"gossip{where}", (), None, apply)
+
+
+
+def quantize_int8() -> Transform:
+    """Declarative marker: quantize gossip payloads to int8 on the wire
+    (QSGD-style symmetric quantization with per-leaf-segment scales, see
+    :func:`repro.core.gossip.mix_shifts`).  Position in the chain is
+    irrelevant; it applies to every gossip of the optimizer.  Only
+    neighbor-schedule (shift-structured) topologies support a quantized
+    wire format -- ``GossipPlan`` refuses dense-matrix regimes rather than
+    silently sending full precision (the Corollary-3 warm-up phase is the
+    one exception: exact averaging intentionally skips quantization)."""
+    return Transform("quantize_int8", (), None, None, tag="int8")
+
+
+def average_gradients() -> Transform:
+    """Exact global gradient averaging (the All-Reduce baseline): replaces
+    ``g`` with its node-mean, broadcast back to every node."""
+
+    def apply(ctx):
+        ctx.tensors["g"] = jax.tree.map(
+            lambda g: jnp.broadcast_to(
+                jnp.mean(_f32(g), axis=0, keepdims=True), g.shape),
+            ctx.tensors["g"])
+
+    return Transform("average_gradients", (), None, apply)
+
+
+def quasi_global_momentum(beta: float, *, slot: str = "m",
+                          out: str = "m_next") -> Transform:
+    """QG-DmSGD's momentum [32]: EMA of the quasi-global displacement,
+    ``m_next = beta m + (1 - beta) (x - x_next) / lr`` -- tracks the
+    *averaged* trajectory, so it must run AFTER the gossip of ``x_next``."""
+
+    def init(params):
+        return {slot: _zeros_slot(params, None)}
+
+    def apply(ctx):
+        ctx.tensors[out] = jax.tree.map(
+            lambda mi, xi, xn: (beta * _f32(mi)
+                                + (1.0 - beta) * (_f32(xi) - xn) / ctx.lr),
+            ctx.tensors[slot], ctx.tensors["x"], ctx.tensors["x_next"])
+
+    return Transform(f"quasi_global_momentum({beta})", (slot,), init, apply)
+
+
+def trace_adam_moments(b1: float = 0.9, b2: float = 0.999,
+                       dtype=None) -> Transform:
+    """Adam first/second moment traces with bias correction.
+
+    Writes ``mu_next``/``nu_next`` (the stored EMAs) and ``mu_hat``/
+    ``nu_hat`` (bias-corrected, consumed by :func:`adam_descent`).  The
+    moment dtype is explicit, like :func:`trace_momentum`'s."""
+
+    def init(params):
+        return {"mu": _zeros_slot(params, dtype),
+                "nu": _zeros_slot(params, dtype)}
+
+    def apply(ctx):
+        t = ctx.tensors
+        t["mu_next"] = jax.tree.map(
+            lambda mi, gi: b1 * _f32(mi) + (1.0 - b1) * _f32(gi),
+            t["mu"], t["g"])
+        t["nu_next"] = jax.tree.map(
+            lambda vi, gi: b2 * _f32(vi) + (1.0 - b2) * jnp.square(_f32(gi)),
+            t["nu"], t["g"])
+        c = _f32(ctx.count) + 1.0
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+        t["mu_hat"] = jax.tree.map(lambda mi: mi / bc1, t["mu_next"])
+        t["nu_hat"] = jax.tree.map(lambda vi: vi / bc2, t["nu_next"])
+
+    return Transform(f"trace_adam_moments({b1},{b2})", ("mu", "nu"),
+                     init, apply)
+
+
+def adam_descent(eps: float = 1e-8, weight_decay: float = 0.0) -> Transform:
+    """AdamW descent: ``x_next = x - lr (mu_hat / (sqrt(nu_hat) + eps)
+    + weight_decay * x)`` (decoupled weight decay)."""
+
+    def apply(ctx):
+        t = ctx.tensors
+        t["x_next"] = jax.tree.map(
+            lambda xi, mh, vh: _f32(xi) - ctx.lr * (
+                mh / (jnp.sqrt(vh) + eps) + weight_decay * _f32(xi)),
+            t["x"], t["mu_hat"], t["nu_hat"])
+
+    return Transform(f"adam_descent(eps={eps},wd={weight_decay})",
+                     (), None, apply)
+
+
+# ---------------------------------------------------------------------------
+# chain -> DecentralizedOptimizer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecentralizedOptimizer:
+    """A chain of transforms bound to a topology.
+
+    ``init(params)`` builds the :class:`OptState`; ``update(params, state,
+    grads, step, lr)`` runs one decentralized step, resolving the gossip
+    executor from ``step`` (static int -> that step's realization; traced
+    array -> ``lax.switch`` over a periodic schedule).  ``update_with_mix``
+    takes the executor explicitly -- that is the hook
+    :class:`repro.core.plan.GossipPlan` compiles through, and the ONLY
+    schedule-handling code path (no ``traced_step`` / ``W_override`` /
+    ``warmup_allreduce_steps`` flag trifecta).
+    """
+
+    name: str
+    topology: Topology
+    beta: float
+    transforms: tuple
+    warmup_steps: int = 0
+
+    @property
+    def compression(self) -> str | None:
+        for t in self.transforms:
+            if t.tag == "int8":
+                return "int8"
+        return None
+
+    @property
+    def slot_names(self) -> tuple:
+        names: list = []
+        for t in self.transforms:
+            for s in t.slots:
+                if s not in names:
+                    names.append(s)
+        return tuple(names)
+
+    # -- state <-> named slots ------------------------------------------------
+
+    def _slots_of(self, state: OptState) -> dict:
+        names = self.slot_names
+        if len(names) == 1:
+            return {names[0]: state.momentum}
+        return dict(state.momentum)
+
+    def _state_of(self, slots: dict, count) -> OptState:
+        names = self.slot_names
+        if len(names) == 1:
+            return OptState(slots[names[0]], count)
+        return OptState({k: slots[k] for k in names}, count)
+
+    # -- public API -----------------------------------------------------------
+
+    def init(self, params: PyTree) -> OptState:
+        slots: dict = {}
+        for t in self.transforms:
+            if t.init is None:
+                continue
+            for k, v in t.init(params).items():
+                slots.setdefault(k, v)
+        return self._state_of(slots, jnp.zeros((), jnp.int32))
+
+    def update_with_mix(self, params: PyTree, state: OptState, grads: PyTree,
+                        lr, mix: Callable[[PyTree], PyTree]
+                        ) -> tuple[PyTree, OptState]:
+        """One step with an explicitly injected gossip executor."""
+        slots = self._slots_of(state)
+        tensors = dict(slots)
+        tensors["x"] = params
+        tensors["g"] = grads
+        ctx = Context(tensors=tensors, lr=lr, count=state.count, mix=mix)
+        for t in self.transforms:
+            if t.apply is not None:
+                t.apply(ctx)
+        new_params = jax.tree.map(lambda a, b: a.astype(b.dtype),
+                                  tensors["x_next"], params)
+        new_slots = {
+            s: jax.tree.map(lambda a, b: a.astype(b.dtype),
+                            tensors[s + "_next"], slots[s])
+            for s in self.slot_names}
+        return new_params, self._state_of(new_slots, state.count + 1)
+
+    def update(self, params: PyTree, state: OptState, grads: PyTree,
+               step, lr) -> tuple[PyTree, OptState]:
+        """One step; the gossip realization is resolved from ``step``."""
+        return self.update_with_mix(params, state, grads, lr,
+                                    self.mix_for_step(step))
+
+    def mix_for_step(self, step) -> Callable[[PyTree], PyTree]:
+        """Default executor resolution.  Static int steps delegate to
+        :meth:`GossipPlan.mix` (the ONE owner of the warm-up / neighbor /
+        dense decision tree); a traced step takes the ``lax.switch`` path
+        over a periodic schedule."""
+        if isinstance(step, (int, np.integer)):
+            from .plan import GossipPlan
+            return GossipPlan.for_optimizer(self).mix(int(step))
+        if self.warmup_steps:
+            raise ValueError(
+                "allreduce_warmup needs static-int steps (the warm-up phase "
+                "is a compile-time property); drive warm-up through "
+                "GossipPlan or pass python-int steps")
+        return lambda t: gossip_mod.mix_switch(t, self.topology, step)
+
+
+def chain(*transforms, topology: Topology, name: str = "chain",
+          beta: float = 0.0, warmup_steps: int = 0) -> DecentralizedOptimizer:
+    """Compose transforms into a :class:`DecentralizedOptimizer`.
+
+    ``None`` entries are skipped (convenient for conditional pieces like an
+    optional :func:`quantize_int8`)."""
+    ts = tuple(t for t in transforms if t is not None)
+    if not ts:
+        raise ValueError("chain() needs at least one transform")
+    opt = DecentralizedOptimizer(name=name, topology=topology, beta=beta,
+                                 transforms=ts, warmup_steps=warmup_steps)
+    if not opt.slot_names:
+        raise ValueError(
+            f"chain {name!r} declares no state slots; every optimizer needs "
+            "at least one (e.g. trace_momentum)")
+    return opt
+
+
+def allreduce_warmup(tau: int):
+    """Wrapping combinator (Corollary 3): returns ``opt -> opt'`` where the
+    first ``tau`` steps of ``opt'`` mix with exact global averaging
+    ``W = (1/n) 1 1^T`` so the initial consensus residue vanishes from the
+    bound.  ``GossipPlan`` folds the warm-up phase into its compile-cache
+    key (a warm-up executable must never serve post-warm-up steps)."""
+
+    def wrap(opt: DecentralizedOptimizer) -> DecentralizedOptimizer:
+        return dataclasses.replace(opt, warmup_steps=int(tau))
+
+    return wrap

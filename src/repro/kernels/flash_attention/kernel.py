@@ -19,7 +19,6 @@ gemma-2 soft-capping.  float32 accumulation regardless of input dtype.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -15,6 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
 from repro.core import optim as optim_mod  # noqa: E402
+from repro.core import plan as plan_mod  # noqa: E402
 from repro.core import topology as topo_mod  # noqa: E402
 from repro.launch import hlo_cost, sharding, steps  # noqa: E402
 from repro.launch.mesh import HW, make_production_mesh, to_logical_mesh  # noqa: E402
@@ -102,11 +103,12 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
 
     if kind == "train":
         top = topo_mod.get_topology(topology, nodes)
-        if optimizer == "dmsgd" and knobs.get("compression"):
-            opt = optim_mod.dmsgd(top, beta=0.9,
-                                  compression=knobs["compression"])
-        else:
-            opt = optim_mod.make_optimizer(optimizer, top, beta=0.9)
+        # momentum dtype is threaded from the arch layout (dbrx-132b: bf16
+        # momentum for the HBM fit) as an explicit optimizer argument.
+        opt = optim_mod.make_optimizer(
+            optimizer, top, beta=0.9,
+            momentum_dtype=_DTYPES[layout.get("momentum_dtype")],
+            compression=knobs.get("compression"))
         stacked = _stack_node_axis(params, nodes)
         p_specs = sharding.param_specs(stacked, mesh, node_axis=True,
                                        fsdp_params=knobs.get("fsdp_params",
@@ -126,7 +128,11 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
         step_fn = steps.make_train_step(cfg, opt,
                                         micro_batch=layout.get("micro"),
                                         grads_dtype=grads_dtype)
-        fn = partial(step_fn, gossip_phase)
+        # GossipPlan resolves the phase's realization into a mixing
+        # executor (static shifts -> collective-permute HLO); the dry-run
+        # keeps its own jit for the sharding/donation annotations.
+        plan = plan_mod.GossipPlan.for_optimizer(opt)
+        fn = partial(step_fn, plan.mix(gossip_phase))
         in_shardings = (p_specs, state_specs, bspec, P())
         out_shardings = (p_specs, state_specs, P())
         jitted = jax.jit(fn, in_shardings=sharding.named(in_shardings, mesh),

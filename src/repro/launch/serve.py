@@ -2,6 +2,11 @@
 
 CPU demo uses REDUCED configs; the production shardings are exercised by the
 decode shapes of the dry-run.
+
+The decode executable is cached in a :class:`repro.core.plan.CompileCache`
+(the same keyed-compile engine GossipPlan uses for train steps), so
+repeated ``generate`` calls for the same config reuse one jit wrapper --
+and its compiled executables -- instead of re-jitting per call.
 """
 from __future__ import annotations
 
@@ -12,7 +17,18 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.core.plan import CompileCache
 from repro.models import model as M
+
+_DECODE_CACHE = CompileCache()
+
+
+def _decode_fn(cfg):
+    """One jitted decode step per config (ModelConfig is hashable)."""
+    return _DECODE_CACHE.get(
+        ("decode", cfg),
+        lambda: jax.jit(lambda p, t, c, i, img: M.decode_step(
+            p, cfg, t, c, i, image_embeds=img)))
 
 
 def generate(cfg, params, prompts, *, max_new: int = 32, cache_len: int = 128,
@@ -22,8 +38,7 @@ def generate(cfg, params, prompts, *, max_new: int = 32, cache_len: int = 128,
     plen = prompts.shape[1]
     cache = M.init_cache(cfg, batch=B, cache_len=cache_len,
                          dtype=jnp.float32)
-    decode = jax.jit(lambda p, t, c, i, img: M.decode_step(
-        p, cfg, t, c, i, image_embeds=img))
+    decode = _decode_fn(cfg)
 
     toks = prompts
     key = jax.random.key(seed)

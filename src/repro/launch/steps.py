@@ -14,15 +14,12 @@ Input shapes (assignment):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import optim as optim_mod
-from repro.core.topology import Topology
 from repro.models import model as M
 
 PyTree = Any
@@ -132,15 +129,18 @@ def make_train_step(cfg: M.ModelConfig,
                     opt: optim_mod.DecentralizedOptimizer,
                     *, micro_batch: int | None = None,
                     grads_dtype=jnp.float32):
-    """Returns train_step(params, opt_state, batch, lr, W_override=None)
-    for ONE gossip realization (the topology step is baked in statically via
-    ``gossip_step``); the launcher compiles one function per distinct
-    realization (see ``launch.train.build_trainer``), or feeds the dense
-    ``W^{(k)}`` through ``W_override`` for aperiodic dense schedules.
+    """Returns ``train_step(mix, params, opt_state, batch, lr)``.
+
+    ``mix`` is the realization-bound gossip executor (the first, Python-
+    level argument): :class:`repro.core.plan.GossipPlan` compiles one
+    executable per distinct realization, closing over that realization's
+    ``mix`` -- static schedules bake their shifts into collective-permute
+    HLO, dense time-varying schedules receive ``W^{(k)}`` as a traced
+    argument inside the plan's shared executable.
 
     Gradients are computed per node (vmap over the leading node axis) with
     optional microbatch accumulation, then fed to the decentralized
-    optimizer -- partial averaging happens inside ``opt.update``.
+    optimizer -- partial averaging happens inside ``opt.update_with_mix``.
     """
 
     def per_node_grads(p, tokens, image_embeds):
@@ -168,8 +168,7 @@ def make_train_step(cfg: M.ModelConfig,
         (loss, g), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), g0), xs)
         return loss, g
 
-    def train_step(gossip_step: int, params, opt_state, batch, lr,
-                   W_override=None):
+    def train_step(mix, params, opt_state, batch, lr):
         tokens = batch["tokens"]
         image_embeds = batch.get("image_embeds")
         if image_embeds is None:
@@ -178,9 +177,8 @@ def make_train_step(cfg: M.ModelConfig,
         else:
             losses, grads = jax.vmap(per_node_grads)(params, tokens,
                                                      image_embeds)
-        new_params, new_state = opt.update(params, opt_state, grads,
-                                           gossip_step, lr,
-                                           W_override=W_override)
+        new_params, new_state = opt.update_with_mix(params, opt_state, grads,
+                                                    lr, mix)
         return new_params, new_state, losses.mean()
 
     return train_step

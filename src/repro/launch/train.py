@@ -17,83 +17,55 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint, configs
+from repro.core import flatbuf
 from repro.core import optim as optim_mod
 from repro.core import schedule
 from repro.core import topology as topo_mod
+from repro.core.plan import GossipPlan
 from repro.data import SyntheticLM
 from repro.launch import steps as steps_mod
 
 
 def build_trainer(cfg, topology, optimizer_name: str, beta: float,
-                  micro_batch=None):
+                  micro_batch=None, momentum_dtype=None, warmup_steps=0):
     """Returns (opt, step_for) where ``step_for(step)`` is the compiled
     train-step callable for that step's gossip realization.
 
-    Compiled functions are keyed by the gossip REALIZATION, not by
-    ``step % period``: aperiodic schedules (random_match, one_peer_exp with
-    random_perm/uniform, which report period 1<<30) draw a fresh matrix
-    every step, and the old ``period >= 64 -> period = 1`` fallback froze
-    them to their step-0 realization forever.
-
-    * neighbor-schedule topologies: one jit per distinct (self_w, shifts)
-      tuple -- at most tau distinct realizations, each with its static
-      shifts lowered to ppermute HLO.
-    * dense time-varying topologies (random_match): ONE jit taking the
-      realized W^{(k)} as a traced argument, fed per step.
-    * static topologies: one jit.
+    All schedule handling (static / neighbor-schedule / dense-traced
+    regimes, warm-up phase keying, realization-keyed compile cache) lives
+    in :class:`repro.core.plan.GossipPlan`; this is just optimizer + step
+    function + plan wiring.
     """
-    opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta)
+    opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta,
+                                   momentum_dtype=momentum_dtype)
+    if warmup_steps:
+        from repro.core.transforms import allreduce_warmup
+        opt = allreduce_warmup(warmup_steps)(opt)
     step_fn = steps_mod.make_train_step(cfg, opt, micro_batch=micro_batch)
-    cache: dict = {}
+    plan = GossipPlan.for_optimizer(opt, fn=step_fn)
+    return opt, plan.step_fn
 
-    if topology.neighbor_schedule is None and topology.time_varying:
-        jitted = jax.jit(
-            lambda p, s, b, lr, W: step_fn(0, p, s, b, lr, W_override=W))
 
-        def step_for(step: int):
-            if step < opt.warmup_steps:
-                # warm-up ignores W^{(k)} (update() drops W_override), so
-                # the W-as-argument executable would bake warm-up behavior
-                # in; compile warm-up steps via the static-step route.
-                return _static_step(step)
-            W = jnp.asarray(topology.weights(step), jnp.float32)
-            return lambda p, s, b, lr: jitted(p, s, b, lr, W)
-
-        def _static_step(step: int):
-            key = ("warmup", True)
-            if key not in cache:
-                cache[key] = jax.jit(
-                    lambda p, s, b, lr, k=int(step): step_fn(k, p, s, b, lr))
-            return cache[key]
-
-        return opt, step_for
-
-    def step_for(step: int):
-        # update() behaves differently during the all-reduce warm-up, so
-        # the phase is part of the key (a warm-up-compiled executable must
-        # not serve post-warm-up steps, and vice versa).
-        warm = step < opt.warmup_steps
-        if topology.neighbor_schedule is not None:
-            self_w, shifts = topology.neighbor_schedule(step)
-            key = (warm, self_w, tuple(shifts))
-        else:
-            key = (warm, "static")
-        if key not in cache:
-            cache[key] = jax.jit(
-                lambda p, s, b, lr, k=int(step): step_fn(k, p, s, b, lr))
-        return cache[key]
-
-    return opt, step_for
+@jax.jit
+def _consensus_sq(params) -> jax.Array:
+    """sum_i ||x_i - x_bar||^2 over the packed flat buffers (one jitted
+    reduction per tree structure; padding columns are zeros on every node,
+    so they contribute exactly 0)."""
+    _, bufs = flatbuf.pack(params)
+    total = jnp.zeros((), jnp.float32)
+    for buf in bufs:
+        b32 = buf.astype(jnp.float32)
+        total += jnp.sum(jnp.square(b32 - b32.mean(axis=0, keepdims=True)))
+    return total
 
 
 def consensus_distance(params) -> float:
-    """||x_i - x_bar|| aggregated over the pytree (paper's consensus metric)."""
-    total = 0.0
-    for leaf in jax.tree.leaves(params):
-        leaf = leaf.astype(jnp.float32)
-        mean = leaf.mean(axis=0, keepdims=True)
-        total += float(jnp.sum((leaf - mean) ** 2))
-    return total ** 0.5
+    """||x_i - x_bar|| aggregated over the pytree (paper's consensus metric).
+
+    Vectorized via the flat-buffer pack: one compiled reduction and a
+    single host sync, instead of a python loop with a ``float()`` sync per
+    leaf."""
+    return float(jnp.sqrt(_consensus_sq(params)))
 
 
 def run(args) -> dict:
@@ -102,8 +74,14 @@ def run(args) -> dict:
         cfg = configs.reduced_config(cfg)
     n = args.nodes
     top = topo_mod.get_topology(args.topology, n)
+    # momentum dtype comes from the arch's layout config (e.g. dbrx-132b
+    # keeps momentum in bf16 for the HBM fit) -- an explicit argument, not
+    # a process-global knob.
+    layout = configs.get_layout(args.arch)
+    mom_dtype = {"bfloat16": jnp.bfloat16,
+                 "float32": jnp.float32}.get(layout.get("momentum_dtype"))
     opt, step_for = build_trainer(cfg, top, args.optimizer, args.beta,
-                                  args.micro_batch)
+                                  args.micro_batch, momentum_dtype=mom_dtype)
 
     from repro.models import model as M
     params = M.init(cfg, jax.random.key(args.seed))

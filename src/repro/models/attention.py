@@ -11,7 +11,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .layers import dense_init, rms_norm, rms_norm_init, rope, softcap
+from .layers import dense_init, rms_norm, rms_norm_init, rope
 
 __all__ = ["attn_init", "attn_apply", "attn_decode", "cross_attn_apply",
            "KVCache", "init_kv_cache"]

@@ -20,7 +20,6 @@ Three entry points:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

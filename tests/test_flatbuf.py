@@ -188,6 +188,33 @@ _HLO_SCRIPT = textwrap.dedent("""
     txt = f.lower(params, state, params).compile().as_text()
     got = analyze_hlo(txt).collective_counts.get("collective-permute", 0)
     assert got == 1, got
+
+    # the same guarantee through GossipPlan.lowered: shardings ride on the
+    # ShapeDtypeStructs, the plan owns the jit.
+    from repro.core.plan import GossipPlan
+    sharded = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh), params)
+    sstate = optim.OptState(
+        momentum=sharded,
+        count=jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P())))
+    plan = GossipPlan.for_optimizer(
+        opt, fn=lambda mix, p, s, g: opt.update_with_mix(p, s, g, 0.1, mix))
+    txt = plan.lowered(0, sharded, sstate, sharded).compile().as_text()
+    got = analyze_hlo(txt).collective_counts.get("collective-permute", 0)
+    assert got == 1, ("plan", got)
+
+    # d_adamw gossips (mu, nu, x) as ONE f32 payload: still one permute.
+    opt2 = optim.d_adamw(top)
+    st2 = optim.OptState(momentum={"mu": sharded, "nu": sharded},
+                         count=jax.ShapeDtypeStruct(
+                             (), jnp.int32,
+                             sharding=NamedSharding(mesh, P())))
+    plan2 = GossipPlan.for_optimizer(
+        opt2, fn=lambda mix, p, s, g: opt2.update_with_mix(p, s, g, 0.1, mix))
+    txt = plan2.lowered(0, sharded, st2, sharded).compile().as_text()
+    got = analyze_hlo(txt).collective_counts.get("collective-permute", 0)
+    assert got == 1, ("d_adamw", got)
     print("HLO-OK")
 """)
 
@@ -241,30 +268,44 @@ def test_mix_switch_rejects_aperiodic_schedules():
         gossip.mix_switch(tree, top, jnp.asarray(0))
 
 
-def test_warmup_allreduce_supersedes_w_override():
-    """Corollary-3 warm-up must do exact global averaging even when the
-    launcher feeds the realized W^{(k)} through W_override (dense aperiodic
-    path): during warm-up the override is dropped, after it it applies."""
+def test_warmup_supersedes_dense_schedule():
+    """Corollary-3 warm-up on a dense aperiodic topology (random_match):
+    warm-up steps mix with exact global averaging -- NOT the realized
+    pairwise matching -- and post-warm-up steps honor W^{(k)}.  The plan
+    keys the two phases to separate executables."""
     from repro.core import optim
+    from repro.core.plan import GossipPlan
+    from repro.core.transforms import allreduce_warmup
 
     n, d = 8, 5
     top = topology.bipartite_random_match(n, seed=0)
-    opt = optim.dmsgd(top, beta=0.0, warmup_allreduce_steps=2)
+    opt = allreduce_warmup(2)(optim.dmsgd(top, beta=0.0))
     assert opt.warmup_steps == 2
+    plan = GossipPlan.for_optimizer(
+        opt, fn=lambda mix, p, s, g: opt.update_with_mix(p, s, g, 0.1, mix))
+    assert plan.realization_key(0) == ("warmup",)
+    assert plan.realization_key(1) == ("warmup",)
+    assert plan.realization_key(2) != plan.realization_key(0)
+
     rng = np.random.default_rng(0)
     params = {"x": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
     state = opt.init(params)
-    W0 = jnp.asarray(top.weights(0), jnp.float32)
     g = {"x": jnp.zeros((n, d), jnp.float32)}
-    p1, s1 = opt.update(params, state, g, 0, 0.1, W_override=W0)
-    # warm-up step: exact consensus despite the (pairwise-matching) W
+    p1, s1 = plan.step_fn(0)(params, state, g)
+    # warm-up step: exact consensus despite the (pairwise-matching) W^{(0)}
     np.testing.assert_allclose(
         np.asarray(p1["x"]), np.asarray(p1["x"]).mean(0, keepdims=True)
         .repeat(n, 0), rtol=1e-6, atol=1e-6)
-    # after warm-up the override is honored (matches explicit dense mix)
+    plan.step_fn(1)(params, state, g)     # same warm-up executable
+    assert plan.num_compiled == 1
+    plan.step_fn(2)(p1, s1, g)            # dense-traced executable
+    assert plan.num_compiled == 2
+    # after warm-up the realized W^{(k)} applies (lr=0 isolates the mix)
+    plan0 = GossipPlan(top, fn=lambda mix, p, s, g: opt.update_with_mix(
+        p, s, g, 0.0, mix))
     params2 = {"x": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
-    state2 = opt.init(params2)
-    p2, _ = opt.update(params2, state2, g, 2, 0.0, W_override=W0)
-    want = gossip.mix_dense(params2, W0)
+    p2, _ = plan0.step_fn(2)(params2, opt.init(params2), g)
+    W2 = jnp.asarray(top.weights(2), jnp.float32)
+    want = gossip.mix_dense(params2, W2)
     np.testing.assert_allclose(np.asarray(p2["x"]), np.asarray(want["x"]),
                                rtol=1e-6, atol=1e-6)

@@ -1,6 +1,4 @@
 """Decentralized optimizer semantics and convergence tests."""
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -145,45 +143,48 @@ def test_one_peer_matches_static_rate_stochastic():
 
 
 def test_traced_step_path_matches_static_path():
+    """update() dispatches on the step type: a traced array takes the
+    lax.switch path and matches the static-int realization path."""
     n, d = 8, 4
     A, b, _ = _quadratic_problem(n, d)
     top = topology.one_peer_exponential(n)
-    o_static = optim.dmsgd(top, beta=0.9)
-    o_traced = optim.dmsgd(top, beta=0.9, traced_step=True)
+    opt = optim.dmsgd(top, beta=0.9)
 
     p1, p2 = {"x": jnp.zeros((n, d))}, {"x": jnp.zeros((n, d))}
-    s1, s2 = o_static.init(p1), o_traced.init(p2)
-    upd = jax.jit(lambda p, s, g, k: o_traced.update(p, s, g, k, 0.05))
+    s1, s2 = opt.init(p1), opt.init(p2)
+    upd = jax.jit(lambda p, s, g, k: opt.update(p, s, g, k, 0.05))
     for k in range(7):
         g = {"x": _grads(A, b, p1["x"])}
-        p1, s1 = o_static.update(p1, s1, g, k, 0.05)
+        p1, s1 = opt.update(p1, s1, g, k, 0.05)
         p2, s2 = upd(p2, s2, g, jnp.asarray(k))
     np.testing.assert_allclose(p1["x"], p2["x"], rtol=1e-5, atol=1e-6)
 
 
-def test_momentum_dtype_knob():
+def test_momentum_dtype_argument():
+    """Momentum dtype is an explicit trace_momentum/optimizer argument
+    (the old process-global set_momentum_dtype knob is gone)."""
     n, d = 4, 3
     top = topology.one_peer_exponential(n)
-    optim.set_momentum_dtype(jnp.bfloat16)
-    try:
-        opt = optim.dmsgd(top, beta=0.9)
-        p = {"x": jnp.zeros((n, d), jnp.float32)}
-        s = opt.init(p)
-        assert s.momentum["x"].dtype == jnp.bfloat16
-        p2, s2 = opt.update(p, s, {"x": jnp.ones((n, d))}, 0, 0.1)
-        assert s2.momentum["x"].dtype == jnp.bfloat16
-        assert p2["x"].dtype == jnp.float32
-    finally:
-        optim.set_momentum_dtype(None)
+    assert not hasattr(optim, "set_momentum_dtype")
+    opt = optim.dmsgd(top, beta=0.9, momentum_dtype=jnp.bfloat16)
+    p = {"x": jnp.zeros((n, d), jnp.float32)}
+    s = opt.init(p)
+    assert s.momentum["x"].dtype == jnp.bfloat16
+    p2, s2 = opt.update(p, s, {"x": jnp.ones((n, d))}, 0, 0.1)
+    assert s2.momentum["x"].dtype == jnp.bfloat16
+    assert p2["x"].dtype == jnp.float32
 
 
 def test_corollary3_warmup_allreduce():
     """Corollary 3: with all-reduce warm-up, iterates are exactly consensual
     through the warm-up phase (sum_{k<tau} ||x - x_bar||^2 == 0)."""
+    from repro.core.transforms import allreduce_warmup
+
     n, d = 8, 5
     A, b, _ = _quadratic_problem(n, d)
     top = topology.one_peer_exponential(n)
-    opt = optim.dmsgd(top, beta=0.9, warmup_allreduce_steps=3)
+    opt = allreduce_warmup(3)(optim.dmsgd(top, beta=0.9))
+    assert opt.warmup_steps == 3
     rng = np.random.default_rng(0)
     params = {"x": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}
     state = opt.init(params)

@@ -1,5 +1,4 @@
 """Hypothesis property tests on system invariants."""
-import math
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Data pipeline, checkpoint, schedule, steps and hlo_cost unit tests."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -121,12 +120,14 @@ def test_train_step_microbatch_equivalence():
     tokens = jax.random.randint(jax.random.key(1), (n, 4, 16), 0,
                                 cfg.vocab_size)
     batch = {"tokens": tokens}
+    from repro.core.plan import GossipPlan
+    mix0 = GossipPlan.for_optimizer(opt).mix(0)
     f_full = steps_mod.make_train_step(cfg, opt, micro_batch=None)
     f_mb = steps_mod.make_train_step(cfg, opt, micro_batch=2)
     s1 = opt.init(stacked)
-    p1, s1b, l1 = f_full(0, stacked, s1, batch, 0.01)
+    p1, s1b, l1 = f_full(mix0, stacked, s1, batch, 0.01)
     s2 = opt.init(stacked)
-    p2, s2b, l2 = f_mb(0, stacked, s2, batch, 0.01)
+    p2, s2b, l2 = f_mb(mix0, stacked, s2, batch, 0.01)
     assert float(l1) == pytest.approx(float(l2), rel=1e-4)
     # bf16 activations => accumulation-order noise ~1e-3 absolute
     for a, b in zip(jax.tree.leaves(s1b.momentum),

@@ -1,0 +1,323 @@
+"""Transform-algebra equivalence suite + GossipPlan regressions.
+
+1. Every chain-built legacy optimizer (dmsgd, dsgd, vanilla_dmsgd,
+   qg_dmsgd, parallel_msgd) reproduces the SEED closures step-for-step,
+   BIT-identically, over static-exp / one-peer-exp / random_match
+   topologies.  The references below are verbatim transcriptions of the
+   seed ``core/optim.py`` update bodies.
+2. d_adamw (the transform-built decentralized AdamW) is property-tested:
+   identical data => matches a hand-rolled AdamW reference; heterogeneous
+   data => nodes reach consensus and converge on a quadratic.
+3. GossipPlan keys warm-up vs post-warm-up compiles separately, compiles
+   once per realization, and serves aperiodic dense schedules from a
+   single traced-W executable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip, optim, topology, transforms
+from repro.core.plan import GossipPlan
+
+f32 = jnp.float32
+
+
+def _tree(n, seed=0):
+    k = jax.random.key(seed)
+    return {
+        "w": jax.random.normal(jax.random.fold_in(k, 0), (n, 5, 3)),
+        "b": jax.random.normal(jax.random.fold_in(k, 1), (n, 4)),
+        "h": jax.random.normal(jax.random.fold_in(k, 2),
+                               (n, 3)).astype(jnp.bfloat16),
+    }
+
+
+def _assert_trees_equal(got, want):
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# --- seed-closure references (verbatim math from the pre-transform optim) ---
+
+def _cast_like(tree, like):
+    return jax.tree.map(lambda a, b: a.astype(b.dtype), tree, like)
+
+
+def _ref_dmsgd(top, beta, p, m, g, k, lr):
+    pre_m = jax.tree.map(
+        lambda mi, gi: beta * mi.astype(f32) + gi.astype(f32), m, g)
+    pre_x = jax.tree.map(
+        lambda xi, mi: xi.astype(f32) - lr * mi.astype(f32), p, m)
+    mixed_m, mixed_x = gossip.mix((pre_m, pre_x), top, k)
+    return _cast_like(mixed_x, p), _cast_like(mixed_m, m)
+
+
+def _ref_vanilla(top, beta, p, m, g, k, lr):
+    new_m = jax.tree.map(
+        lambda mi, gi: beta * mi.astype(f32) + gi.astype(f32), m, g)
+    pre_x = jax.tree.map(lambda xi, mi: xi.astype(f32) - lr * mi, p, new_m)
+    mixed_x = gossip.mix(pre_x, top, k)
+    return _cast_like(mixed_x, p), _cast_like(new_m, m)
+
+
+def _ref_qg(top, beta, p, m, g, k, lr):
+    pre_x = jax.tree.map(
+        lambda xi, gi, mi: xi.astype(f32)
+        - lr * (gi.astype(f32) + beta * mi.astype(f32)), p, g, m)
+    mixed_x = gossip.mix(pre_x, top, k)
+    new_m = jax.tree.map(
+        lambda mi, xi, xn: (beta * mi.astype(f32)
+                            + (1.0 - beta) * (xi.astype(f32) - xn) / lr),
+        m, p, mixed_x)
+    return _cast_like(mixed_x, p), _cast_like(new_m, m)
+
+
+def _ref_parallel(top, beta, p, m, g, k, lr):
+    g_avg = jax.tree.map(
+        lambda gi: jnp.broadcast_to(
+            jnp.mean(gi.astype(f32), axis=0, keepdims=True), gi.shape), g)
+    new_x = jax.tree.map(
+        lambda xi, mi: (xi.astype(f32) - lr * mi.astype(f32)).astype(xi.dtype),
+        p, m)
+    new_m = jax.tree.map(lambda mi, gi: beta * mi.astype(f32) + gi, m, g_avg)
+    return new_x, _cast_like(new_m, m)
+
+
+_REFS = {
+    "dmsgd": _ref_dmsgd,
+    "dsgd": _ref_dmsgd,
+    "vanilla_dmsgd": _ref_vanilla,
+    "qg_dmsgd": _ref_qg,
+    "parallel_msgd": _ref_parallel,
+}
+
+
+@pytest.mark.parametrize("topname", ["static_exp", "one_peer_exp",
+                                     "random_match"])
+@pytest.mark.parametrize("name", sorted(_REFS))
+def test_chain_bit_identical_to_seed_closures(name, topname, n=8):
+    """chain(...)-built optimizers == seed closures, bit for bit, params
+    AND momentum, over 6 steps of every schedule regime."""
+    top = topology.get_topology(topname, n)
+    beta = 0.0 if name == "dsgd" else 0.8
+    opt = optim.make_optimizer(name, top, beta=beta)
+    ref = _REFS[name]
+
+    p = _tree(n, seed=1)
+    s = opt.init(p)
+    rp, rm = p, s.momentum
+    for k in range(6):
+        g = _tree(n, seed=100 + k)
+        p, s = opt.update(p, s, g, k, 0.05)
+        rp, rm = ref(top, beta, rp, rm, g, k, 0.05)
+        _assert_trees_equal(p, rp)
+        _assert_trees_equal(s.momentum, rm)
+    assert int(s.count) == 6
+
+
+def test_quantized_dmsgd_bit_identical(n=8):
+    """quantize_int8() in the chain == seed dmsgd(compression='int8')."""
+    top = topology.one_peer_exponential(n)
+    opt = optim.dmsgd(top, beta=0.8, compression="int8")
+    assert opt.compression == "int8"
+
+    def ref(p, m, g, k, lr, beta=0.8):
+        pre_m = jax.tree.map(
+            lambda mi, gi: beta * mi.astype(f32) + gi.astype(f32), m, g)
+        pre_x = jax.tree.map(
+            lambda xi, mi: xi.astype(f32) - lr * mi.astype(f32), p, m)
+        mm, mx = gossip.mix((pre_m, pre_x), top, k, compression="int8")
+        return _cast_like(mx, p), _cast_like(mm, m)
+
+    p = _tree(n, seed=2)
+    s = opt.init(p)
+    rp, rm = p, s.momentum
+    for k in range(4):
+        g = _tree(n, seed=200 + k)
+        p, s = opt.update(p, s, g, k, 0.05)
+        rp, rm = ref(rp, rm, g, k, 0.05)
+        _assert_trees_equal(p, rp)
+        _assert_trees_equal(s.momentum, rm)
+
+
+# --- d_adamw properties -----------------------------------------------------
+
+def _adamw_ref_step(x, mu, nu, g, t, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """Single-node AdamW reference (bias-corrected, decoupled decay)."""
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * g * g
+    mu_hat = mu / (1 - b1 ** (t + 1))
+    nu_hat = nu / (1 - b2 ** (t + 1))
+    x = x - lr * (mu_hat / (np.sqrt(nu_hat) + eps) + wd * x)
+    return x, mu, nu
+
+
+def test_d_adamw_identical_data_matches_adamw_reference(n=8):
+    """With identical grads and identical init on every node, gossip is a
+    no-op (mixing equal rows with 0.5/0.5 weights is exact), so d_adamw
+    must track single-node AdamW."""
+    top = topology.one_peer_exponential(n)
+    opt = optim.d_adamw(top, weight_decay=0.01)
+    d = 6
+    rng = np.random.default_rng(0)
+    x0 = rng.standard_normal(d).astype(np.float32)
+    p = {"x": jnp.broadcast_to(jnp.asarray(x0), (n, d))}
+    s = opt.init(p)
+    rx, rmu, rnu = x0.copy(), np.zeros(d, np.float32), np.zeros(d, np.float32)
+    for t in range(5):
+        gk = rng.standard_normal(d).astype(np.float32)
+        g = {"x": jnp.broadcast_to(jnp.asarray(gk), (n, d))}
+        p, s = opt.update(p, s, g, t, 1e-2)
+        rx, rmu, rnu = _adamw_ref_step(rx, rmu, rnu, gk, t, 1e-2, wd=0.01)
+        np.testing.assert_allclose(np.asarray(p["x"]),
+                                   np.broadcast_to(rx, (n, d)),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s.momentum["mu"]["x"]),
+                               np.broadcast_to(rmu, (n, d)),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_d_adamw_converges_and_reaches_consensus(n=8):
+    """Heterogeneous quadratic: the node-average converges near the global
+    optimum and nodes agree; second moments stay nonnegative."""
+    d = 5
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.standard_normal((n, d, d)) * 0.3
+                    + np.eye(d), f32)
+    b = jnp.asarray(rng.standard_normal((n, d)) * 0.3, f32)
+    H = np.einsum("nij,nik->jk", np.asarray(A), np.asarray(A)) / n
+    rhs = np.einsum("nij,ni->j", np.asarray(A), np.asarray(b)) / n
+    x_star = np.linalg.solve(H, rhs)
+
+    top = topology.one_peer_exponential(n)
+    opt = optim.d_adamw(top)
+    p = {"x": jnp.zeros((n, d))}
+    s = opt.init(p)
+    for k in range(400):
+        r = jnp.einsum("nij,nj->ni", A, p["x"]) - b
+        g = {"x": jnp.einsum("nij,ni->nj", A, r)}
+        p, s = opt.update(p, s, g, k, 0.02)
+    xs = np.asarray(p["x"])
+    assert np.linalg.norm(xs.mean(0) - x_star) < 0.1
+    assert np.linalg.norm(xs - xs.mean(0, keepdims=True)) < 0.05
+    for leaf in jax.tree.leaves(s.momentum["nu"]):
+        assert float(jnp.min(leaf)) >= 0.0
+
+
+def test_d_adamw_warmup_combinator(n=8):
+    """allreduce_warmup composes with d_adamw: warm-up steps are exactly
+    consensual even from desynchronized inits."""
+    top = topology.one_peer_exponential(n)
+    opt = transforms.allreduce_warmup(2)(optim.d_adamw(top))
+    rng = np.random.default_rng(2)
+    p = {"x": jnp.asarray(rng.standard_normal((n, 4)), f32)}
+    s = opt.init(p)
+    p, s = opt.update(p, s, {"x": jnp.zeros((n, 4), f32)}, 0, 0.01)
+    dev = float(jnp.abs(p["x"] - p["x"].mean(0, keepdims=True)).max())
+    assert dev < 1e-6
+
+
+# --- GossipPlan regressions -------------------------------------------------
+
+def test_plan_regimes():
+    assert GossipPlan(topology.star(8)).regime == "static"
+    assert GossipPlan(topology.grid_2d(8)).regime == "static"
+    assert GossipPlan(topology.one_peer_exponential(8)).regime == "neighbor"
+    assert GossipPlan(topology.static_exponential(8)).regime == "neighbor"
+    assert GossipPlan(topology.bipartite_random_match(8)).regime == "dense"
+    assert GossipPlan(topology.one_peer_hypercube(8)).regime == "dense"
+
+
+@pytest.mark.parametrize("topname", ["ring", "star", "static_exp",
+                                     "one_peer_exp", "random_match", "full"])
+def test_plan_mix_matches_gossip_mix(topname, n=8):
+    top = topology.get_topology(topname, n)
+    plan = GossipPlan(top)
+    tree = _tree(n, seed=3)
+    for k in (0, 1, 3):
+        _assert_trees_equal(plan.mix(k)(tree), gossip.mix(tree, top, k))
+
+
+def test_plan_compiles_once_per_realization(n=8):
+    """one_peer_exp has tau distinct realizations; the plan compiles tau
+    executables no matter how many steps are taken, and warm-up gets its
+    own key."""
+    top = topology.one_peer_exponential(n)   # tau = 3
+    plan = GossipPlan(top, warmup_steps=2, fn=lambda mix, t: mix(t))
+    tree = _tree(n, seed=4)
+    for k in range(10):
+        plan.step_fn(k)(tree)
+    # warm-up executable + one per realization visited at steps 2..9
+    realized = {plan.realization_key(k) for k in range(2, 10)}
+    assert plan.num_compiled == 1 + len(realized)
+    assert plan.realization_key(0) == ("warmup",)
+    assert plan.realization_key(2) != ("warmup",)
+    # same realization -> the exact same compiled callable
+    assert plan.step_fn(2) is plan.step_fn(2 + top.period)
+
+
+def test_plan_dense_schedule_single_executable_not_frozen(n=8):
+    """random_match: ONE compiled executable, but consecutive steps apply
+    different matchings (the realized W^{(k)} is a traced argument)."""
+    top = topology.bipartite_random_match(n, seed=0)
+    plan = GossipPlan(top, fn=lambda mix, t: mix(t))
+    tree = _tree(n, seed=5)
+    out0 = plan.step_fn(0)(tree)
+    out1 = plan.step_fn(1)(tree)
+    assert plan.num_compiled == 1
+    diffs = [float(jnp.abs(a.astype(f32) - b.astype(f32)).max())
+             for a, b in zip(jax.tree.leaves(out0), jax.tree.leaves(out1))]
+    assert max(diffs) > 0.0
+    _assert_trees_equal(out0, gossip.mix_dense(
+        tree, jnp.asarray(top.weights(0), f32)))
+
+
+def test_plan_refuses_compression_on_dense_regimes(n=8):
+    """int8 wire quantization exists only for the shift path; dense-matrix
+    topologies must refuse loudly instead of silently sending f32."""
+    with pytest.raises(ValueError, match="neighbor-schedule"):
+        GossipPlan(topology.bipartite_random_match(n), compression="int8")
+    with pytest.raises(ValueError, match="neighbor-schedule"):
+        GossipPlan(topology.star(n), compression="int8")
+    opt = optim.dmsgd(topology.bipartite_random_match(n), beta=0.9,
+                      compression="int8")
+    with pytest.raises(ValueError, match="neighbor-schedule"):
+        opt.update({"x": jnp.zeros((n, 3))},
+                   opt.init({"x": jnp.zeros((n, 3))}),
+                   {"x": jnp.zeros((n, 3))}, 0, 0.1)
+
+
+def test_plan_int8_compression_threaded(n=8):
+    top = topology.one_peer_exponential(n)
+    opt = optim.dmsgd(top, beta=0.9, compression="int8")
+    plan = GossipPlan.for_optimizer(opt)
+    assert plan.compression == "int8"
+    tree = _tree(n, seed=6)
+    self_w, shifts = top.neighbor_schedule(0)
+    _assert_trees_equal(
+        plan.mix(0)(tree),
+        gossip.mix_shifts(tree, self_w, shifts, compression="int8"))
+
+
+# --- deprecation shim -------------------------------------------------------
+
+def test_make_optimizer_legacy_kwargs_warn_and_map():
+    top = topology.one_peer_exponential(8)
+    with pytest.warns(DeprecationWarning, match="traced_step"):
+        opt = optim.make_optimizer("dmsgd", top, beta=0.9, traced_step=True)
+    assert opt.warmup_steps == 0
+    with pytest.warns(DeprecationWarning, match="warmup_allreduce_steps"):
+        opt = optim.make_optimizer("dmsgd", top, beta=0.9,
+                                   warmup_allreduce_steps=3)
+    assert opt.warmup_steps == 3
+    with pytest.raises(KeyError):
+        optim.make_optimizer("nope", top)
+
+
+def test_chain_requires_state_slot():
+    with pytest.raises(ValueError, match="state slot"):
+        transforms.chain(transforms.scale_by_lr("m"),
+                         topology=topology.ring(8), name="bad")
