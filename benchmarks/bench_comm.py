@@ -1,10 +1,13 @@
 """Paper Table 1 / 7 / 8: per-iteration communication by topology.
 
-Structural: counts gossip rounds (= ppermute launches) and bytes per node
-per iteration for a fixed model size, plus the theoretical transient-
-iteration complexity from the measured spectral gap (eq. 4).  Also measures
-the wall time of one fused DmSGD gossip on a realistic MULTI-LEAF pytree
-(~100 leaves, 1M params) through both engines:
+Structural: reads gossip rounds, collectives and bytes per node per
+iteration straight off the realization IR (``gossip.gossip_spec``) for a
+fixed model size, plus the theoretical transient-iteration complexity from
+the measured spectral gap (eq. 4).  Matchings (random_match,
+one_peer_hypercube, base_k) report true 1-permute bytes; dense fallbacks
+report the O(n) all-gather they actually pay.  Also measures the wall time
+of one fused DmSGD gossip on a realistic MULTI-LEAF pytree (~100 leaves,
+1M params) through both engines:
 
   * flat (production): pack leaves into one (n, B) buffer per dtype,
     one roll per shift per dtype group, fused combine;
@@ -16,9 +19,14 @@ regime: gossip cost == collective cost), where the per-leaf path launches
 group.  When the hosting process has a single device, the comparison is
 re-executed in a subprocess with ``--xla_force_host_platform_device_count=8``
 (XLA locks the device count at first init).
+
+``--quick`` (the CI fast tier) skips the SPMD subprocess and timing loops
+and writes the structural table to ``BENCH_comm.json`` so the perf
+trajectory accumulates as a workflow artifact.
 """
 from __future__ import annotations
 
+import json
 import math
 import os
 import subprocess
@@ -32,38 +40,31 @@ from repro.core.plan import GossipPlan
 
 from .common import emit, time_fn
 
-def _transformer_like_tree(n: int, n_blocks: int = 24):
-    """~1M params split over 4 * n_blocks + 1 leaves (transformer-shaped)."""
-    per_block = 1_000_000 // (n_blocks + 1)
-    leaves = {}
-    for i in range(n_blocks):
-        q = per_block // 4
-        leaves[f"blk{i:02d}"] = {
-            "attn": jnp.zeros((n, q), jnp.float32),
-            "mlp_in": jnp.zeros((n, q), jnp.float32),
-            "mlp_out": jnp.zeros((n, q), jnp.float32),
-            "ln": jnp.zeros((n, per_block - 3 * q), jnp.float32),
-        }
-    leaves["embed"] = jnp.zeros((n, per_block), jnp.float32)
-    return leaves
+TABLE_TOPOLOGIES = ["ring", "grid", "static_exp", "one_peer_exp",
+                    "one_peer_hypercube", "random_match", "base_k", "ceca",
+                    "full"]
 
 
-def run(n: int = 16) -> None:
+def comm_table(n: int = 16, *, time_mix: bool = True) -> list[dict]:
+    """One row per topology: IR wire accounting + spectral/transient info."""
     tree = {"w": jnp.zeros((n, 250_000, 4), jnp.float32)}  # 1M f32 per node
     layout = flatbuf.layout_of(tree)
-    for name in ["ring", "grid", "static_exp", "one_peer_exp",
-                 "random_match", "full"]:
+    rows = []
+    for name in TABLE_TOPOLOGIES:
         top = topology.get_topology(name, n)
         spec = gossip.gossip_spec(top, 0, layout=layout)
-        rounds = spec["rounds"]
         # same packed-layout accounting for both kinds; x2 = x + momentum
         bytes_per_iter = spec["bytes_per_node_per_step"] * 2
-        # GossipPlan resolves step 0's realization into a mixing executor
-        # (the same resolution the train path compiles through).
-        mix0 = GossipPlan(top).mix(0)
-        us = time_fn(lambda t=tree, m=mix0: m(t), iters=5)
+        us = float("nan")
+        if time_mix:
+            # GossipPlan resolves step 0's realization into a mixing
+            # executor (the same resolution the train path compiles
+            # through).
+            mix0 = GossipPlan(top).mix(0)
+            us = time_fn(lambda t=tree, m=mix0: m(t), iters=5)
         W = top.weights(0)
-        gap = spectral.spectral_gap(W) if not top.time_varying else float("nan")
+        gap = (spectral.spectral_gap(W) if not top.time_varying
+               else float("nan"))
         if name == "one_peer_exp":
             # eq. (11): same transient complexity as static exp
             trans = n ** 3 * math.log2(n) ** 2
@@ -71,10 +72,25 @@ def run(n: int = 16) -> None:
             trans = float("nan")
         else:
             trans = spectral.transient_iterations(n, gap)
-        emit(f"comm_{name}", us,
-             f"degree={top.max_degree};rounds={rounds};"
-             f"bytes_per_iter={bytes_per_iter};gap={gap:.4f};"
-             f"transient~{trans:.3g}")
+        rows.append(dict(
+            topology=name, n=n, degree=top.max_degree, kind=spec["kind"],
+            rounds=spec["rounds"], wire_multiplier=spec["wire_multiplier"],
+            collectives_per_step=spec["collectives_per_step"],
+            bytes_per_iter=bytes_per_iter, us_per_mix=us, gap=gap,
+            transient=trans,
+            finite_time_period=(top.period if top.period is not None
+                                and name in ("one_peer_exp",
+                                             "one_peer_hypercube",
+                                             "base_k", "ceca") else None)))
+    return rows
+
+
+def run(n: int = 16) -> None:
+    for r in comm_table(n):
+        emit(f"comm_{r['topology']}", r["us_per_mix"],
+             f"degree={r['degree']};kind={r['kind']};rounds={r['rounds']};"
+             f"bytes_per_iter={r['bytes_per_iter']};gap={r['gap']:.4f};"
+             f"transient~{r['transient']:.3g}")
 
     # flat vs per-leaf engine at 8 NODES (8-way sharded mesh)
     if jax.device_count() >= 8:
@@ -101,13 +117,28 @@ def run(n: int = 16) -> None:
                 f"(exit {r.returncode}); see stderr above")
 
 
+def run_quick(out_path: str = "BENCH_comm.json", n: int = 16) -> None:
+    """CI fast tier: structural IR accounting only (no SPMD subprocess, no
+    timing loops), dumped as JSON for the workflow-artifact trajectory."""
+    rows = comm_table(n, time_mix=False)
+    rec = {"n": n, "rows": rows}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    for r in rows:
+        emit(f"comm_{r['topology']}", 0.0,
+             f"kind={r['kind']};wire_multiplier={r['wire_multiplier']};"
+             f"bytes_per_iter={r['bytes_per_iter']}")
+    print(f"wrote {out_path}")
+
+
 def engine_compare_spmd(nn: int = 8) -> None:
     """Time one gossip round, flat vs per-leaf, node-sharded over 8 devices.
 
     This is the regime the flat engine exists for: every roll is a
     collective-permute, so the per-leaf path pays one collective LAUNCH per
     leaf per shift (~100/step on a transformer) while the packed path pays
-    one per dtype group."""
+    one per dtype group.  Matchings (one_peer_hypercube) ride the same
+    packed path via ONE explicit-pairs permute."""
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
     if jax.device_count() < nn:
@@ -124,7 +155,8 @@ def engine_compare_spmd(nn: int = 8) -> None:
     layout_m = flatbuf.layout_of(mtree)
     for name in ["one_peer_exp", "static_exp"]:
         top = topology.get_topology(name, nn)
-        self_w, shifts = top.neighbor_schedule(0)
+        real = top.realization(0)
+        self_w, shifts = real.self_w, list(real.shifts)
         # flat/production path through the plan's realization resolution
         mix0 = GossipPlan(top).mix(0)
         flat_fn = jax.jit(lambda t: mix0(t),
@@ -145,9 +177,40 @@ def engine_compare_spmd(nn: int = 8) -> None:
              f"n={nn};leaves={n_leaves};permutes_per_step={rolls_leaf};"
              f"flat_speedup={us_leaf / max(us_flat, 1e-9):.2f}x")
 
+    # the matching wire path: one explicit-pairs permute per dtype group
+    top = topology.get_topology("one_peer_hypercube", nn)
+    mix0 = GossipPlan(top, mesh=mesh).mix(0)
+    match_fn = jax.jit(lambda t: mix0(t),
+                       in_shardings=(shard,), out_shardings=shard)
+    us_match = time_fn(match_fn, mtree, iters=10)
+    emit("comm_engine_one_peer_hypercube_matching", us_match,
+         f"n={nn};leaves={n_leaves};"
+         f"permutes_per_step={len(layout_m.groups)}")
+
+
+def _transformer_like_tree(n: int, n_blocks: int = 24):
+    """~1M params split over 4 * n_blocks + 1 leaves (transformer-shaped)."""
+    per_block = 1_000_000 // (n_blocks + 1)
+    leaves = {}
+    for i in range(n_blocks):
+        q = per_block // 4
+        leaves[f"blk{i:02d}"] = {
+            "attn": jnp.zeros((n, q), jnp.float32),
+            "mlp_in": jnp.zeros((n, q), jnp.float32),
+            "mlp_out": jnp.zeros((n, q), jnp.float32),
+            "ln": jnp.zeros((n, per_block - 3 * q), jnp.float32),
+        }
+    leaves["embed"] = jnp.zeros((n, per_block), jnp.float32)
+    return leaves
+
 
 if __name__ == "__main__":
     if "--engine-spmd" in sys.argv:
         engine_compare_spmd()
+    elif "--quick" in sys.argv:
+        out = "BENCH_comm.json"
+        if "--out" in sys.argv:
+            out = sys.argv[sys.argv.index("--out") + 1]
+        run_quick(out)
     else:
         run()

@@ -31,6 +31,16 @@ def run(n: int = 32) -> None:
             topology.one_peer_exponential(n, schedule="uniform"), 3 * tau),
         "one_peer_n6": spectral.consensus_residue_products(
             topology.one_peer_exponential(48), 3 * tau),
+        # finite-time families from the follow-up literature: exact zero at
+        # their (shorter-than-or-equal) period for ANY factorizable n
+        "base_k2": spectral.consensus_residue_products(
+            topology.base_k(n, 1), 3 * tau),
+        "base_k4": spectral.consensus_residue_products(
+            topology.base_k(n, 3), 3 * tau),
+        "ceca": spectral.consensus_residue_products(
+            topology.ceca(n), 3 * tau),
+        "ceca_n48": spectral.consensus_residue_products(
+            topology.ceca(48), 3 * tau),
     }
     us = 1e6 * (time.perf_counter() - t0) / len(res)
     emit("consensus_fig4", us,
@@ -39,6 +49,15 @@ def run(n: int = 32) -> None:
          f"perm_zero={res['one_peer_perm'][tau-1] < 1e-12};"
          f"unif_not_periodic={res['one_peer_unif'][tau-1] > 1e-12};"
          f"n48_not_periodic={res['one_peer_n6'][2*6-1] > 1e-12}")
+    emit("consensus_finite_time", us,
+         f"base_k2_zero_at_{topology.base_k(n, 1).period}="
+         f"{res['base_k2'][topology.base_k(n, 1).period - 1] < 1e-12};"
+         f"base_k4_zero_at_{topology.base_k(n, 3).period}="
+         f"{res['base_k4'][topology.base_k(n, 3).period - 1] < 1e-12};"
+         f"ceca_zero_at_{topology.ceca(n).period}="
+         f"{res['ceca'][topology.ceca(n).period - 1] < 1e-12};"
+         f"ceca_n48_zero_at_{topology.ceca(48).period}="
+         f"{res['ceca_n48'][topology.ceca(48).period - 1] < 1e-12}")
     for k, v in res.items():
         emit(f"consensus_{k}", us,
              ";".join(f"k{i}={x:.2e}" for i, x in enumerate(v[:2 * tau])))

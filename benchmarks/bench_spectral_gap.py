@@ -40,3 +40,17 @@ def run() -> None:
     for name, gaps in rows.items():
         emit(f"spectral_gap_{name}", us,
              ";".join(f"n{n}={g:.4f}" for n, g in zip(sizes, gaps)))
+
+    # Finite-time families have no single-matrix gap; their figure of merit
+    # is steps-to-exact-average (the "effective gap" is 1 per period).
+    for name, make in [("one_peer_exp", topology.one_peer_exponential),
+                       ("base_k2", lambda n: topology.base_k(n, 1)),
+                       ("ceca", topology.ceca)]:
+        periods = []
+        for n in sizes:
+            try:
+                periods.append(make(n).period)
+            except ValueError:
+                periods.append(None)   # n not factorizable at this degree
+        emit(f"finite_time_period_{name}", us,
+             ";".join(f"n{n}={p}" for n, p in zip(sizes, periods)))

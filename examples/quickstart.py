@@ -39,6 +39,9 @@ def main():
 
     # 2) One-peer exponential graph + DmSGD (Algorithm 1), compiled through
     #    a GossipPlan: one executable per distinct gossip realization.
+    #    Realizations are first-class IR (here: Shifts(0.5, ((-2^t, 0.5),))
+    #    per step t -- swap in topology.base_k / topology.ceca for the
+    #    finite-time families, or random_match for Matching realizations).
     top = topology.one_peer_exponential(N_NODES)
     opt = optim.dmsgd(top, beta=0.9)
     state = opt.init(stacked)

@@ -84,6 +84,11 @@ def main():
     ap.add_argument("--hetero", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--with-parallel", action="store_true")
+    ap.add_argument("--tops", default="one_peer_exp,static_exp",
+                    help="comma-separated topologies (any repro.core."
+                         "topology family, incl. the finite-time base_k / "
+                         "ceca graphs and matching families like "
+                         "one_peer_hypercube / random_match)")
     ap.add_argument("--out", default="results/train_lm.json")
     args = ap.parse_args()
 
@@ -92,7 +97,7 @@ def main():
         jax.eval_shape(lambda: M.init(cfg, jax.random.key(0)))))
     print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  nodes={args.nodes}")
 
-    tops = ["one_peer_exp", "static_exp"] + (
+    tops = [t.strip() for t in args.tops.split(",") if t.strip()] + (
         ["parallel"] if args.with_parallel else [])
     results = {}
     for t in tops:
@@ -106,9 +111,10 @@ def main():
                    "args": vars(args)}, f, indent=1)
     print(f"\nwrote {args.out}")
     print("final losses:", {t: c[-1][1] for t, c in results.items()})
-    op, se = results["one_peer_exp"][-1][1], results["static_exp"][-1][1]
-    print(f"one-peer vs static final-loss gap: {abs(op - se):.4f} "
-          "(Remark 7: should be small)")
+    if {"one_peer_exp", "static_exp"} <= results.keys():
+        op, se = results["one_peer_exp"][-1][1], results["static_exp"][-1][1]
+        print(f"one-peer vs static final-loss gap: {abs(op - se):.4f} "
+              "(Remark 7: should be small)")
 
 
 if __name__ == "__main__":

@@ -6,30 +6,34 @@ production mesh that axis is sharded over the ``node`` mesh axis, so each
 device block holds exactly its node's replica (itself sharded over
 ``fsdp``/``model``).
 
-Both mixing paths first pack the pytree into one contiguous ``(n, B)``
+Every mixing path first packs the pytree into one contiguous ``(n, B)``
 buffer per dtype (:mod:`repro.core.flatbuf`), so the collective cost is
-independent of the leaf count:
+independent of the leaf count.  One lowering per realization-IR node
+(:mod:`repro.core.topology`):
 
-* ``mix_dense(tree, W)`` -- reference: one ``einsum('ij,jb->ib', W, buf)``
-  per dtype group.  Exact for *any* doubly-stochastic ``W`` (random match,
-  star, ...).  Under GSPMD this lowers to an all-gather over the node axis:
-  O(n) bytes.
+* ``Shifts``   -> :func:`mix_shifts`: a weighted sum of **rolls** of the
+  node axis.  ``jnp.roll`` with a static shift on a sharded axis lowers to
+  ``collective-permute`` -- one roll per shift **per dtype group** (NOT per
+  leaf): one-peer exponential = ONE collective-permute per iteration (the
+  paper's Omega(1) claim), static exponential = ceil(log2 n) permutes.
+* ``Matching`` -> :func:`mix_matching`: an arbitrary pairing is ONE
+  explicit-pairs ``lax.ppermute`` (via ``shard_map`` over the node mesh
+  axis) per dtype group -- random matchings and the one-peer hypercube no
+  longer fall to the dense all-gather route.  Without a node mesh the same
+  math runs as a local static gather.
+* ``Dense``    -> :func:`mix_dense`: one ``einsum('ij,jb->ib')`` per dtype
+  group.  Exact for *any* doubly-stochastic ``W`` but lowers to an
+  all-gather over the node axis: O(n) bytes per node.
+* ``Identity`` -> no-op (skipped round, ``gossip(every=k)`` off-steps).
 
-* ``mix_shifts(tree, self_w, shifts)`` -- production: for circulant
-  topologies (ring, static/one-peer exponential), gossip is a weighted sum
-  of **rolls** of the node axis.  ``jnp.roll`` with a static shift on a
-  sharded axis lowers to ``collective-permute`` -- the TPU-native equivalent
-  of BlueFog's ``neighbor_allreduce``.  One roll per shift **per dtype
-  group** (NOT per leaf): one-peer exponential = ONE collective-permute per
-  iteration (the paper's Omega(1) claim), static exponential =
-  ceil(log2 n) permutes (Omega(log2 n)).  The weighted combine
-  ``w_self*x + sum_d w_d*recv_d`` runs through the fused ``gossip_mix``
-  Pallas kernel on TPU (one VMEM-tiled HBM sweep over the packed buffer)
-  and through the algebraically identical ``ref`` path elsewhere.
+The weighted combine ``w_self*x + sum_d w_d*recv_d`` runs through the fused
+``gossip_mix`` Pallas kernel on single-chip TPU and the algebraically
+identical ``ref`` path elsewhere, for shift and matching rounds alike.
 
-Both paths preserve the global mean exactly (double stochasticity), which
+All paths preserve the global mean exactly (double stochasticity), which
 the property tests assert; the flat path is bit-identical to the historical
-per-leaf path (kept as ``mix_shifts_per_leaf`` for tests/benchmarks).
+per-leaf path (kept as ``mix_shifts_per_leaf`` for tests/benchmarks), and
+the matching path is bit-identical to ``mix_dense`` of the realized W.
 """
 from __future__ import annotations
 
@@ -40,18 +44,20 @@ import jax
 import jax.numpy as jnp
 
 from . import flatbuf
-from .topology import Topology
+from .topology import (
+    AperiodicScheduleError,
+    Dense,
+    Identity,
+    Matching,
+    Shifts,
+    Topology,
+)
 
 PyTree = Any
 
-__all__ = ["mix_dense", "mix_shifts", "mix", "gossip_spec",
-           "mix_shifts_per_leaf", "MAX_SWITCH_PHASES"]
-
-# lax.switch over more phases than this would bloat one compiled executable
-# with hundreds of branches; schedules longer than this (random_match and
-# the random one-peer schedules report period 1<<30) are APERIODIC and must
-# use the static-step path, which compiles one function per realization.
-MAX_SWITCH_PHASES = 64
+__all__ = ["mix_dense", "mix_shifts", "mix_matching", "mix_realization",
+           "mix", "mix_switch", "gossip_spec", "mix_shifts_per_leaf",
+           "AperiodicScheduleError"]
 
 
 def _use_pallas() -> bool:
@@ -151,6 +157,70 @@ def mix_shifts(tree: PyTree, self_weight: float,
     return flatbuf.unpack(layout, out)
 
 
+def _permute_rows(buf, partner: tuple, mesh, axis_name: str):
+    """recv[i] = buf[partner[i]] along the leading node axis.
+
+    With a mesh whose ``axis_name`` axis has exactly one node per device
+    block, this is ONE explicit-pairs ``lax.ppermute`` (via shard_map) --
+    arbitrary pairings cost the same one collective-permute as a uniform
+    roll.  Without such a mesh (single process, or nodes packed several per
+    device) it falls back to a local static gather (which GSPMD would turn
+    into an all-gather -- correct, just not the one-permute wire path)."""
+    n = len(partner)
+    if mesh is not None and mesh.shape.get(axis_name) == n:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        pairs = [(src, dst) for dst, src in enumerate(partner)]
+        spec = P(axis_name, *([None] * (buf.ndim - 1)))
+
+        def recv(x):
+            return jax.lax.ppermute(x, axis_name, perm=pairs)
+
+        return shard_map(recv, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                         check_rep=False)(buf)
+    return jnp.take(buf, jnp.asarray(partner), axis=0)
+
+
+def mix_matching(tree: PyTree, partner: tuple, w_self: float = 0.5,
+                 compression: str | None = None, mesh=None,
+                 axis_name: str = "node") -> PyTree:
+    """Pairwise gossip: x_i <- w_self * x_i + (1 - w_self) * x_{partner[i]}.
+
+    ``partner`` is an involution; fixed points keep their value exactly
+    (w_self*x + (1-w_self)*x == x).  One explicit-pairs collective-permute
+    per dtype group when ``mesh`` carries the node axis; the fused
+    ``gossip_mix`` combine is reused for the weighted merge.
+
+    compression='int8' quantizes the permuted payload exactly like
+    :func:`mix_shifts` (per-leaf-segment scales ride along as a second,
+    tiny permute).  Fixed points see quantization error under int8 (their
+    "received" value is their own quantized buffer); perfect matchings --
+    every family shipped here -- have none.
+    """
+    layout, bufs = flatbuf.pack(tree)
+    w_peer = 1.0 - w_self
+
+    if compression == "int8":
+        scales = _leaf_scales(tree, layout)
+        out = []
+        for g, buf, sc in zip(layout.groups, bufs, scales):
+            seg = jnp.asarray(g.seg_ids)
+            x32 = buf.astype(jnp.float32)
+            q = jnp.round(x32 / sc[:, seg]).astype(jnp.int8)
+            rq = _permute_rows(q, partner, mesh, axis_name)
+            rs = _permute_rows(sc, partner, mesh, axis_name)
+            acc = w_self * x32 + w_peer * (rq.astype(jnp.float32) * rs[:, seg])
+            out.append(acc.astype(buf.dtype))
+        return flatbuf.unpack(layout, out)
+
+    out = []
+    for buf in bufs:
+        recv = _permute_rows(buf, partner, mesh, axis_name)
+        out.append(_combine(buf, [recv], w_self, (w_peer,)))
+    return flatbuf.unpack(layout, out)
+
+
 def mix_shifts_per_leaf(tree: PyTree, self_weight: float,
                         shifts: list[tuple[int, float]],
                         compression: str | None = None) -> PyTree:
@@ -181,67 +251,103 @@ def mix_shifts_per_leaf(tree: PyTree, self_weight: float,
     return jax.tree.map(_leaf, tree)
 
 
+def mix_realization(tree: PyTree, realization, *,
+                    compression: str | None = None, mesh=None,
+                    axis_name: str = "node") -> PyTree:
+    """Lower one realization-IR node onto its wire path."""
+    if isinstance(realization, Identity):
+        return tree
+    if isinstance(realization, Shifts):
+        return mix_shifts(tree, realization.self_w, list(realization.shifts),
+                          compression)
+    if isinstance(realization, Matching):
+        return mix_matching(tree, realization.partner, realization.w_self,
+                            compression, mesh, axis_name)
+    if isinstance(realization, Dense):
+        if compression is not None:
+            raise ValueError(
+                f"compression={compression!r} has no dense-matrix wire "
+                f"format; only Shifts/Matching realizations quantize")
+        return mix_dense(tree, jnp.asarray(realization.W, jnp.float32))
+    raise TypeError(f"not a realization IR node: {realization!r}")
+
+
 def mix(tree: PyTree, topology: Topology, step: int,
-        compression: str | None = None) -> PyTree:
+        compression: str | None = None, mesh=None) -> PyTree:
     """Apply W^(step) of ``topology`` to ``tree``; ``step`` must be a Python
-    int (static).  Dispatches to the sparse shift path when available."""
-    if topology.neighbor_schedule is not None:
-        self_w, shifts = topology.neighbor_schedule(step)
-        return mix_shifts(tree, self_w, shifts, compression)
-    W = jnp.asarray(topology.weights(step))
-    return mix_dense(tree, W)
+    int (static).  Dispatches on the realization IR node type."""
+    return mix_realization(tree, topology.realization(step),
+                           compression=compression, mesh=mesh)
 
 
-def mix_switch(tree: PyTree, topology: Topology, step: jax.Array) -> PyTree:
+def mix_switch(tree: PyTree, topology: Topology, step: jax.Array,
+               mesh=None) -> PyTree:
     """Traced-step variant: lax.switch over the topology's period so one
     compiled function serves the whole schedule (each branch keeps its own
-    static-shift collective-permute).
+    static-shift / static-pairs collective-permute; pass ``mesh`` so
+    Matching branches take the one-permute path instead of the gather
+    fallback).
 
-    Only valid for genuinely periodic schedules: aperiodic topologies
-    (random_match, one_peer_exp with random_perm/uniform schedules, which
-    report period 1<<30) have no step->realization map a traced switch can
-    enumerate -- silently folding them mod a cap would freeze the schedule
-    to its first few realizations (the bug this guard replaces)."""
-    if topology.period > MAX_SWITCH_PHASES:
-        raise ValueError(
-            f"mix_switch needs a periodic schedule (period <= "
-            f"{MAX_SWITCH_PHASES}), got period={topology.period} for "
-            f"{topology.name!r}; aperiodic/random schedules must use the "
-            "static-step path (launch.train compiles one function per "
+    Only valid for periodic schedules (``Static``/``Cyclic``): aperiodic
+    schedules (``RandomPerm``/``Aperiodic`` -- random matchings, random
+    one-peer orders) have no step -> realization map a traced switch can
+    enumerate; silently folding them mod a cap would freeze the schedule to
+    its first few realizations (the bug this guard replaces).  NB the
+    executable carries one branch per period step -- a schedule's period is
+    naturally O(log n) for every family here, but a legacy-shimmed
+    Cyclic(P) with huge P buys a P-branch switch."""
+    if not topology.schedule.is_periodic:
+        raise AperiodicScheduleError(
+            f"mix_switch needs a periodic schedule, but {topology.name!r} "
+            f"carries {topology.schedule!r}; aperiodic schedules must use "
+            "the static-step path (GossipPlan compiles one executable per "
             "realization)")
-    period = topology.period
-    branches = [partial(_mix_static, topology=topology, k=k)
+    period = topology.schedule.period
+    branches = [partial(_mix_static, topology=topology, k=k, mesh=mesh)
                 for k in range(period)]
     return jax.lax.switch(step % period, branches, tree)
 
 
-def _mix_static(tree: PyTree, *, topology: Topology, k: int) -> PyTree:
-    return mix(tree, topology, k)
+def _mix_static(tree: PyTree, *, topology: Topology, k: int,
+                mesh=None) -> PyTree:
+    return mix(tree, topology, k, mesh=mesh)
 
 
 def gossip_spec(topology: Topology, step: int,
                 layout: flatbuf.FlatLayout | None = None,
                 compression: str | None = None) -> dict:
-    """Structural description of one gossip round (for roofline accounting).
+    """Structural description of one gossip round, read straight off the
+    realization IR (for roofline accounting).
 
-    With a ``layout`` (from :func:`flatbuf.layout_of`), adds the packed-path
-    wire accounting: collectives per step and bytes sent per node."""
-    if topology.neighbor_schedule is not None:
-        _, shifts = topology.neighbor_schedule(step)
-        spec = {
-            "kind": "ppermute",
-            "rounds": len(shifts),
-            "shifts": [s for s, _ in shifts],
-        }
-        if layout is not None:
-            per_round = flatbuf.wire_bytes_per_round(layout, compression)
-            spec["dtype_groups"] = len(layout.groups)
-            spec["collectives_per_step"] = len(shifts) * len(layout.groups)
-            spec["bytes_per_node_per_step"] = per_round * len(shifts)
-        return spec
-    spec = {"kind": "dense", "rounds": 1, "fanin": topology.max_degree}
+    ``wire_multiplier`` is the number of per-node payload copies the round
+    moves: one per shift for ``Shifts``, exactly 1 for any ``Matching``,
+    ``n - 1`` for ``Dense`` (the packed buffer is all-gathered -- O(n)
+    bytes per node REGARDLESS of the realization's fan-in), 0 for
+    ``Identity``.  With a ``layout`` (from :func:`flatbuf.layout_of`), adds
+    the packed-path byte accounting: collectives per step and bytes sent
+    per node."""
+    r = topology.realization(step)
+    n = topology.n
+    mult = r.wire_multiplier(n)
+    if isinstance(r, Shifts):
+        spec = {"kind": "ppermute", "rounds": len(r.shifts),
+                "shifts": [s for s, _ in r.shifts]}
+        collectives_per_group = len(r.shifts)
+    elif isinstance(r, Matching):
+        paired = sum(1 for i, j in enumerate(r.partner) if j != i)
+        spec = {"kind": "matching", "rounds": 1, "paired_nodes": paired}
+        collectives_per_group = 1
+    elif isinstance(r, Identity):
+        spec = {"kind": "identity", "rounds": 0}
+        collectives_per_group = 0
+    else:
+        spec = {"kind": "dense", "rounds": 1, "fanin": r.max_degree}
+        collectives_per_group = 1
+    spec["wire_multiplier"] = mult
     if layout is not None:
         per_round = flatbuf.wire_bytes_per_round(layout, compression)
         spec["dtype_groups"] = len(layout.groups)
-        spec["bytes_per_node_per_step"] = per_round * topology.max_degree
+        spec["collectives_per_step"] = (collectives_per_group
+                                        * len(layout.groups))
+        spec["bytes_per_node_per_step"] = per_round * mult
     return spec

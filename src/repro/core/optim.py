@@ -29,6 +29,10 @@ pytrees whose leaves carry a leading node axis of size ``n``.
 
 All SGD-family optimizers satisfy: with the ``full_averaging`` topology,
 every node's iterate equals parallel momentum SGD on the averaged gradient.
+Every optimizer composes with ANY realization-IR topology -- including the
+finite-time ``base_k`` (Takezawa 23) and ``ceca`` (cf. Ding 23) families
+-- and with ``gossip(where=..., every=k)`` for local-SGD-style skipped
+rounds (``Identity`` realizations on off-steps).
 
 Momentum/moment dtype is an explicit argument (``momentum_dtype=...``,
 threaded from each arch's layout config, e.g. dbrx-132b's bf16) -- the old

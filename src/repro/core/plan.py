@@ -1,24 +1,27 @@
-"""GossipPlan: unified schedule-aware realization resolution + compile cache.
+"""GossipPlan: realization-IR-driven compile planning + keyed jit cache.
 
-One object owns what used to live as three mutually exclusive flag paths
-(``traced_step`` / ``W_override`` / ``warmup_allreduce_steps``) plus a jit
-cache private to ``launch.train.build_trainer``.  A :class:`GossipPlan`
-classifies a :class:`~repro.core.topology.Topology` into one of three
-compile regimes and keys every executable by the gossip REALIZATION (never
-by ``step % period``, which froze aperiodic schedules):
+One object owns schedule resolution for the whole stack.  A
+:class:`GossipPlan` pattern-matches the **realization IR**
+(:mod:`repro.core.topology`: ``Shifts`` / ``Matching`` / ``Dense`` /
+``Identity``) instead of sniffing topology attributes, and keys every
+executable by the gossip REALIZATION (never by ``step % period``, which
+froze aperiodic schedules):
 
-* ``"static"``  -- one realization forever (ring as dense, star, grid,
-  full): ONE compiled executable.
-* ``"neighbor"`` -- the topology exposes a ``neighbor_schedule`` (circulant
-  shift structure: ring, static/one-peer exponential, incl. the aperiodic
-  random one-peer schedules): one executable per distinct
-  ``(self_weight, shifts)`` tuple, each with its static shifts lowered to
-  collective-permute HLO.  At most ``tau`` distinct realizations even for
-  aperiodic orders.
-* ``"dense"``   -- time-varying dense matrices (random_match,
-  one_peer_hypercube): ONE executable taking the realized ``W^{(k)}`` as a
-  traced argument, fed per step -- baking ``W`` in would freeze the
-  schedule or force a recompile every step.
+* ``Shifts``   -- one executable per distinct ``(self_w, shifts)`` tuple,
+  each with its static shifts lowered to collective-permute HLO.  At most
+  ``tau`` distinct realizations even for aperiodic one-peer orders.
+* ``Matching`` -- one executable per distinct pairing, lowered to ONE
+  explicit-pairs collective-permute per dtype group (needs the node
+  ``mesh`` -- pass it at construction).  Periodic matching families
+  (one-peer hypercube) compile ``tau`` executables; an aperiodic matching
+  stream (random_match) compiles one per distinct matching it visits --
+  bounded only by the run length, the price of O(1) wire bytes where the
+  dense route paid O(n) every step.
+* ``Dense``    -- a Static schedule bakes ``W`` into one executable; a
+  time-varying dense schedule gets ONE executable taking the realized
+  ``W^{(k)}`` as a traced argument, fed per step.
+* ``Identity`` -- the skipped-communication executable
+  (``gossip(every=k)`` off-steps share one compile with ``mix = id``).
 
 The all-reduce warm-up phase (Corollary 3) is folded into the cache key:
 ``realization_key(step) == ("warmup",)`` for ``step < warmup_steps``, so a
@@ -42,7 +45,15 @@ import jax
 import jax.numpy as jnp
 
 from . import gossip
-from .topology import Topology, full_averaging
+from .topology import (
+    Dense,
+    Identity,
+    Matching,
+    Shifts,
+    Static,
+    Topology,
+    full_averaging,
+)
 
 PyTree = Any
 
@@ -50,15 +61,27 @@ __all__ = ["CompileCache", "GossipPlan"]
 
 
 class CompileCache:
-    """Keyed build-once cache (typically: hashable key -> jitted fn)."""
+    """Keyed build-once cache (typically: hashable key -> jitted fn).
 
-    def __init__(self):
-        self._cache: dict = {}
+    ``max_entries`` bounds the cache with least-recently-used eviction --
+    an aperiodic Matching stream (random_match) visits a fresh pairing
+    every step, so without a bound the executable dict would grow for the
+    whole run.  Periodic schedules never evict (their working set is tiny).
+    """
+
+    def __init__(self, max_entries: int | None = None):
+        from collections import OrderedDict
+        self._cache: "OrderedDict" = OrderedDict()
+        self.max_entries = max_entries
 
     def get(self, key, build: Callable[[], Any]):
-        if key not in self._cache:
-            self._cache[key] = build()
-        return self._cache[key]
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        val = self._cache[key] = build()
+        if self.max_entries is not None and len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+        return val
 
     def __len__(self) -> int:
         return len(self._cache)
@@ -73,32 +96,49 @@ class GossipPlan:
     schedule, compression) triple.
 
     ``fn(mix, *args)`` is the function compiled per realization; bind it at
-    construction or via :meth:`bind`.  ``warmup_steps``/``compression``
-    normally come from the optimizer (see :meth:`for_optimizer`).
+    construction or via :meth:`bind`.  ``warmup_steps`` / ``compression`` /
+    ``every`` normally come from the optimizer (see :meth:`for_optimizer`).
+    ``mesh`` (a ``jax.sharding.Mesh`` whose ``node`` axis matches ``n``)
+    enables the one-permute ``Matching`` lowering; without it, matchings
+    fall back to a local gather.
     """
 
     topology: Topology
     warmup_steps: int = 0
     compression: str | None = None
     fn: Callable | None = None
+    mesh: Any = None
+    every: int = 1
+    max_compiles: int = 256
 
     def __post_init__(self):
-        self._cache = CompileCache()
-        if self.compression and self.regime != "neighbor":
-            # int8 wire quantization lives in the shift path
-            # (gossip.mix_shifts); dense-matrix mixing has no quantized
-            # implementation -- refuse rather than silently send f32.
-            raise ValueError(
-                f"compression={self.compression!r} needs a neighbor-schedule "
-                f"(shift-structured) topology; {self.topology.name!r} mixes "
-                f"via dense matrices ({self.regime} regime)")
+        # LRU-bounded: periodic schedules have a tiny working set and never
+        # evict; an aperiodic Matching stream (random_match) compiles one
+        # executable per distinct pairing it visits -- the price of O(1)
+        # wire bytes where the dense route paid O(n) -- and the bound keeps
+        # host memory flat over arbitrarily long runs.
+        self._cache = CompileCache(max_entries=self.max_compiles)
+        if self.compression:
+            types = self.topology.realization_types()
+            if not types <= {Shifts, Matching, Identity}:
+                # int8 wire quantization exists for the permute paths
+                # (gossip.mix_shifts / mix_matching); dense-matrix mixing
+                # has no quantized implementation -- refuse rather than
+                # silently send f32.
+                raise ValueError(
+                    f"compression={self.compression!r} needs shift- or "
+                    f"matching-structured realizations; "
+                    f"{self.topology.name!r} mixes via dense matrices "
+                    f"({sorted(t.__name__ for t in types)})")
 
     @classmethod
-    def for_optimizer(cls, opt, fn: Callable | None = None) -> "GossipPlan":
+    def for_optimizer(cls, opt, fn: Callable | None = None,
+                      mesh=None) -> "GossipPlan":
         """Plan matching a chain-built optimizer's topology, warm-up phase,
-        and wire compression."""
+        wire compression, and communication interval."""
         return cls(opt.topology, warmup_steps=opt.warmup_steps,
-                   compression=opt.compression, fn=fn)
+                   compression=opt.compression, fn=fn, mesh=mesh,
+                   every=getattr(opt, "gossip_every", 1))
 
     def bind(self, fn: Callable) -> "GossipPlan":
         """Same plan parameters with ``fn`` bound (fresh compile cache)."""
@@ -106,26 +146,44 @@ class GossipPlan:
 
     # -- classification -------------------------------------------------------
 
+    def realization(self, step: int):
+        """The realization IR node step ``step`` executes (including the
+        ``every=k`` skipped rounds, which realize as ``Identity``)."""
+        k = int(step)
+        if self.every > 1:
+            if k % self.every:
+                return Identity()
+            k //= self.every
+        return self.topology.realization(k)
+
     @property
     def regime(self) -> str:
-        if self.topology.neighbor_schedule is not None:
-            return "neighbor"
-        if self.topology.time_varying:
-            return "dense"
-        return "static"
+        """Human-readable classification of the realization types."""
+        types = self.topology.realization_types()
+        if types == {Dense}:
+            return ("static" if isinstance(self.topology.schedule, Static)
+                    else "dense")
+        if types <= {Shifts, Identity}:
+            return "shifts"
+        if types <= {Matching, Identity}:
+            return "matching"
+        return "mixed" if Dense in types else "shifts+matching"
 
     def realization_key(self, step: int) -> tuple:
         """Hashable compile-cache key for ``step``'s gossip realization."""
         k = int(step)
         if self.warmup_steps and k < self.warmup_steps:
             return ("warmup",)
-        regime = self.regime
-        if regime == "neighbor":
-            self_w, shifts = self.topology.neighbor_schedule(k)
-            return ("neighbor", self_w, tuple(shifts))
-        if regime == "dense":
-            return ("dense",)
-        return ("static",)
+        r = self.realization(k)
+        if isinstance(r, Identity):
+            return ("identity",)
+        if isinstance(r, Shifts):
+            return ("shifts", r.self_w, r.shifts)
+        if isinstance(r, Matching):
+            return ("matching", r.partner, r.w_self)
+        if isinstance(self.topology.schedule, Static):
+            return ("static",)
+        return ("dense",)   # time-varying dense: one traced-W executable
 
     @property
     def num_compiled(self) -> int:
@@ -140,29 +198,31 @@ class GossipPlan:
         if self.warmup_steps and k < self.warmup_steps:
             top_full = full_averaging(self.topology.n)
             return lambda t: gossip.mix(t, top_full, 0)
-        if self.regime == "neighbor":
-            self_w, shifts = self.topology.neighbor_schedule(k)
-            comp = self.compression
-            return lambda t: gossip.mix_shifts(t, self_w, shifts, comp)
-        W = jnp.asarray(self.topology.weights(k), jnp.float32)
-        return lambda t: gossip.mix_dense(t, W)
+        r = self.realization(k)
+        if isinstance(r, Dense):
+            W = jnp.asarray(r.W, jnp.float32)
+            return lambda t: gossip.mix_dense(t, W)
+        comp, mesh = self.compression, self.mesh
+        return lambda t: gossip.mix_realization(t, r, compression=comp,
+                                                mesh=mesh)
 
     def _dense_executable(self):
-        """The dense regime's single jitted fn, taking the realized
-        ``W^{(k)}`` as its leading traced argument."""
+        """The time-varying dense regime's single jitted fn, taking the
+        realized ``W^{(k)}`` as its leading traced argument."""
         fn = self._require_fn()
         return self._cache.get(("dense",), lambda: jax.jit(
             lambda W, *a: fn((lambda t: gossip.mix_dense(t, W)), *a)))
 
     def _realized_W(self, step: int) -> jax.Array:
-        return jnp.asarray(self.topology.weights(int(step)), jnp.float32)
+        return jnp.asarray(self.realization(int(step)).dense(self.topology.n),
+                           jnp.float32)
 
     def step_fn(self, step: int) -> Callable:
         """Compiled ``fn`` for ``step``'s realization.
 
-        Same realization -> the SAME executable (compiled once); the dense
-        regime returns a per-step wrapper feeding the realized ``W^{(k)}``
-        into one shared traced-``W`` executable."""
+        Same realization -> the SAME executable (compiled once); the
+        time-varying dense regime returns a per-step wrapper feeding the
+        realized ``W^{(k)}`` into one shared traced-``W`` executable."""
         key = self.realization_key(step)
         if key == ("dense",):
             jitted = self._dense_executable()

@@ -1,29 +1,57 @@
-"""Network topologies and weight matrices for decentralized training.
+"""Network topologies as sequences of first-class gossip *realizations*.
 
 Implements every topology compared in the paper (Tables 1/5/7/8, Appendix
-A.3.1): ring, star, 2D-grid, 2D-torus, 1/2-random graph, bipartite random
-match, hypercube, static exponential (eq. 5), one-peer exponential (eq. 7,
-with cyclic / random-permutation / uniform-sampling schedules), and the full
-(parallel-SGD) graph.
+A.3.1) plus the finite-time families from the follow-up literature, all on
+one declarative **realization IR**:
+
+* :class:`Shifts`   -- circulant round: ``x_i += sum_d w_d x_{(i-s_d) mod n}``
+  (ring, static/one-peer exponential, CECA-style circulant schedules).
+  Lowers to one ``collective-permute`` per shift per dtype group.
+* :class:`Matching` -- arbitrary pairwise round: node ``i`` averages with
+  ``partner[i]`` (one-peer hypercube, bipartite random match, the 2-factor
+  rounds of Base-(k+1) graphs).  Lowers to ONE explicit-pairs
+  ``collective-permute`` per dtype group regardless of the pairing.
+* :class:`Dense`    -- fallback ``(n, n)`` matrix round (star, grid, the
+  >=3-clique rounds of Base-(k+1)).  Lowers to an all-gather: O(n) bytes.
+* :class:`Identity` -- skipped round (``W = I``): no communication at all
+  (local-SGD-style ``gossip(every=k)`` off-steps).
+
+*When* each realization applies is a first-class :class:`Schedule`:
+:class:`Static` (one realization forever), :class:`Cyclic` (period-``p``
+rotation), :class:`RandomPerm` (without-replacement shuffle per period,
+Remark 5), and :class:`Aperiodic` (a fresh draw per step, e.g. random
+matchings) -- replacing the old ``period = 1 << 30`` sentinel and
+``time_varying`` flag that downstream code had to sniff.
 
 Conventions follow the paper: ``w_ij`` scales information flowing from node
-``j`` to node ``i``; every ``W`` is doubly stochastic (Assumption A.4).
-Static undirected graphs use the Metropolis(-Hastings) rule [43, eq. (8)].
-
-Matrices are returned as ``numpy`` float64 arrays (they are tiny, n x n) and
-converted to jnp where consumed.  Time-varying topologies expose both the
-dense matrix per step (reference path) and the *neighbor schedule* consumed by
-the ppermute production path in :mod:`repro.core.gossip`.
+``j`` to node ``i``; every realized ``W`` is doubly stochastic (Assumption
+A.4).  Static undirected graphs use the Metropolis(-Hastings) rule [43,
+eq. (8)].  Dense matrices are tiny ``numpy`` float64 ``(n, n)`` arrays,
+converted to jnp where consumed; the production wire path in
+:mod:`repro.core.gossip` consumes the IR directly and never materializes
+``W`` for shift/matching rounds.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable, Iterator
 
 import numpy as np
 
 __all__ = [
+    "Shifts",
+    "Matching",
+    "Dense",
+    "Identity",
+    "Realization",
+    "Schedule",
+    "Static",
+    "Cyclic",
+    "RandomPerm",
+    "Aperiodic",
+    "AperiodicScheduleError",
     "Topology",
     "one_peer_hypercube",
     "ring",
@@ -35,10 +63,219 @@ __all__ = [
     "hypercube",
     "static_exponential",
     "one_peer_exponential",
+    "base_k",
+    "ceca",
     "full_averaging",
     "get_topology",
     "TOPOLOGIES",
 ]
+
+
+class AperiodicScheduleError(ValueError):
+    """A periodic-only code path (e.g. ``gossip.mix_switch``'s traced
+    ``lax.switch``) was handed an aperiodic :class:`Schedule`."""
+
+
+# ---------------------------------------------------------------------------
+# Realization IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Shifts:
+    """Circulant realization: ``x_i^+ = self_w x_i + sum_d w_d x_{(i-s_d)%n}``.
+
+    Each ``(s, w)`` descriptor means node ``i`` *sends* its buffer by
+    ``+s`` (what ``jax.lax.ppermute``/``jnp.roll`` consume on the node mesh
+    axis) and receives from ``(i - s) mod n`` with weight ``w``.
+    """
+
+    self_w: float
+    shifts: tuple  # tuple[(int shift, float weight), ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "shifts", tuple(
+            (int(s), float(w)) for s, w in self.shifts))
+
+    @property
+    def max_degree(self) -> int:
+        return len(self.shifts)
+
+    def wire_multiplier(self, n: int) -> int:
+        """Payload multiples one node sends per step (one per shift)."""
+        return len(self.shifts)
+
+    def dense(self, n: int) -> np.ndarray:
+        W = np.zeros((n, n), dtype=np.float64)
+        np.fill_diagonal(W, self.self_w)
+        for s, w in self.shifts:
+            for i in range(n):
+                W[i, (i - s) % n] += w
+        return W
+
+
+@dataclasses.dataclass(frozen=True)
+class Matching:
+    """Pairwise realization: node ``i`` averages with ``partner[i]``.
+
+    ``partner`` must be an involution (``partner[partner[i]] == i``); a
+    fixed point ``partner[i] == i`` leaves node ``i`` silent that round.
+    Paired nodes take ``w_self`` on their own value and ``1 - w_self`` on
+    the partner's.  ANY matching is one explicit-pairs collective-permute
+    on the wire, no matter how irregular the pairing.
+    """
+
+    partner: tuple  # tuple[int, ...], involution over range(n)
+    w_self: float = 0.5
+
+    def __post_init__(self):
+        p = tuple(int(j) for j in self.partner)
+        object.__setattr__(self, "partner", p)
+        for i, j in enumerate(p):
+            if not 0 <= j < len(p) or p[j] != i:
+                raise ValueError(
+                    f"Matching.partner must be an involution; "
+                    f"partner[{i}]={j} but partner[{j}]={p[j] if 0 <= j < len(p) else '?'}")
+
+    @property
+    def max_degree(self) -> int:
+        return 1
+
+    def wire_multiplier(self, n: int) -> int:
+        return 1
+
+    def dense(self, n: int) -> np.ndarray:
+        W = np.eye(n, dtype=np.float64)
+        for i, j in enumerate(self.partner):
+            if j != i:
+                W[i, i] = self.w_self
+                W[i, j] = 1.0 - self.w_self
+        return W
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Dense:
+    """Fallback realization: an explicit doubly-stochastic ``(n, n)`` W.
+
+    Mixing lowers to ``einsum('ij,jb->ib')`` on the packed buffer, i.e. an
+    all-gather of O(n) bytes per node under GSPMD -- use the structured IR
+    nodes whenever the round has shift or matching structure.
+    """
+
+    W: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "W", np.asarray(self.W, dtype=np.float64))
+
+    @property
+    def max_degree(self) -> int:
+        off = self.W.copy()
+        np.fill_diagonal(off, 0.0)
+        return int((off > 0).sum(axis=1).max(initial=0))
+
+    def wire_multiplier(self, n: int) -> int:
+        # the packed buffer is all-gathered: (n-1)/n of the (n, B) gather
+        # output crosses each node's links, i.e. (n-1) payloads -- NOT the
+        # realization's fan-in.
+        return max(n - 1, 0)
+
+    def dense(self, n: int) -> np.ndarray:
+        return self.W
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    """Skipped round: ``W = I``, zero bytes on the wire."""
+
+    @property
+    def max_degree(self) -> int:
+        return 0
+
+    def wire_multiplier(self, n: int) -> int:
+        return 0
+
+    def dense(self, n: int) -> np.ndarray:
+        return np.eye(n, dtype=np.float64)
+
+
+Realization = Shifts | Matching | Dense | Identity
+IDENTITY = Identity()
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Static:
+    """One realization forever."""
+
+    is_periodic = True
+    period = 1
+
+    def index(self, step: int) -> int:
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Cyclic:
+    """Visit the ``period`` realizations in order, repeating."""
+
+    period: int
+    is_periodic = True
+
+    def index(self, step: int) -> int:
+        return step % self.period
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RandomPerm:
+    """Without-replacement shuffle of the realization set per period block
+    (Remark 5: exact averaging per period is preserved).  The step ->
+    realization map is NOT periodic (each block has a fresh order), but the
+    realization SET stays finite, so compile caches stay bounded."""
+
+    num: int
+    seed: int = 0
+    is_periodic = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "_rng", np.random.default_rng(self.seed))
+        object.__setattr__(self, "_perms", [])
+
+    @property
+    def period(self):
+        return None
+
+    def index(self, step: int) -> int:
+        block, off = divmod(step, self.num)
+        while len(self._perms) <= block:
+            self._perms.append(self._rng.permutation(self.num))
+        return int(self._perms[block][off])
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Aperiodic:
+    """A fresh realization per step: ``draw(step) -> Realization``.
+
+    Draws must be deterministic in ``step`` (seeded), so replays and
+    compile-cache keys stay reproducible.  Aperiodic schedules have no
+    traced ``lax.switch`` lowering -- ``gossip.mix_switch`` raises
+    :class:`AperiodicScheduleError` -- and compile one executable per
+    distinct realization on the static-step path."""
+
+    draw: Callable[[int], Realization]
+    is_periodic = False
+
+    @property
+    def period(self):
+        return None
+
+    def index(self, step: int) -> int:
+        raise AperiodicScheduleError(
+            f"{self!r} draws realizations directly; it has no index map")
+
+
+Schedule = Static | Cyclic | RandomPerm | Aperiodic
 
 
 def _metropolis(adj: np.ndarray) -> np.ndarray:
@@ -58,40 +295,134 @@ def _metropolis(adj: np.ndarray) -> np.ndarray:
     return W
 
 
-@dataclasses.dataclass(frozen=True)
+_APERIODIC_SENTINEL = 1 << 30   # legacy ctor shim only
+
+
+@dataclasses.dataclass(frozen=True, init=False)
 class Topology:
     """A (possibly time-varying) gossip topology over ``n`` nodes.
 
     Attributes:
       name: identifier.
       n: number of nodes.
-      period: number of distinct matrices before the schedule repeats
-        (1 for static topologies).
-      max_degree: maximum number of *out-neighbors excluding self* of any node
-        in one realization -- the paper's per-iteration communication measure.
-      weights_fn: step -> dense (n, n) weight matrix W^(k).
-      neighbor_schedule: step -> (self_weight, [(shift, recv_weight), ...]),
-        or None when the realization is not a circulant structure expressible
-        via ppermute shifts.  Semantics:
-          x_i^{+} = self_weight * x_i + sum_d recv_weight_d * x_{(i - shift_d) mod n}
-        i.e. every node *sends* its buffer by +shift_d; shifts are what
-        jax.lax.ppermute consumes on the node mesh axis.
+      max_degree: maximum number of out-neighbors excluding self of any node
+        in one realization -- the paper's per-iteration communication
+        measure.
+      realizations: the finite tuple of :data:`Realization` values the
+        schedule selects from (None when the schedule is
+        :class:`Aperiodic` and draws realizations directly).
+      schedule: WHICH realization applies at each step (:class:`Static`,
+        :class:`Cyclic`, :class:`RandomPerm` or :class:`Aperiodic`).
+
+    ``realization(step)`` is the one accessor the production stack consumes
+    (:mod:`repro.core.gossip` lowers it, :class:`repro.core.plan.GossipPlan`
+    keys compiles by it).  ``weights(step)`` densifies for analysis code.
+
+    The pre-IR constructor kwargs (``period`` / ``weights_fn`` /
+    ``neighbor_schedule`` / ``time_varying``) and the ``neighbor_schedule``
+    read property survive one release as deprecation shims.
     """
 
     name: str
     n: int
-    period: int
     max_degree: int
-    weights_fn: Callable[[int], np.ndarray]
-    neighbor_schedule: (
-        Callable[[int], tuple[float, list[tuple[int, float]]]] | None
-    ) = None
-    time_varying: bool = False
+    realizations: tuple | None
+    schedule: Schedule
+
+    def __init__(self, name, n, period=None, max_degree=0, weights_fn=None,
+                 neighbor_schedule=None, time_varying=False, *,
+                 realizations=None, schedule=None):
+        if weights_fn is not None or neighbor_schedule is not None:
+            warnings.warn(
+                "Topology(weights_fn=..., neighbor_schedule=...) is "
+                "deprecated; construct with realizations=[Shifts/Matching/"
+                "Dense/...] and schedule=Static()/Cyclic(p)/... instead",
+                DeprecationWarning, stacklevel=2)
+            if neighbor_schedule is not None:
+                def _draw(k, _ns=neighbor_schedule):
+                    self_w, shifts = _ns(k)
+                    return Shifts(self_w, tuple(shifts))
+            else:
+                def _draw(k, _wf=weights_fn):
+                    return Dense(_wf(k))
+            p = 1 if period is None else int(period)
+            if p >= _APERIODIC_SENTINEL:
+                schedule = Aperiodic(_draw)
+                realizations = None
+            else:
+                realizations = tuple(_draw(k) for k in range(max(p, 1)))
+                schedule = Static() if p <= 1 else Cyclic(p)
+        if schedule is None:
+            if not realizations:
+                raise ValueError("Topology needs a schedule or realizations")
+            schedule = (Static() if len(realizations) == 1
+                        else Cyclic(len(realizations)))
+        if realizations is not None:
+            realizations = tuple(realizations)
+        if realizations is None and not isinstance(schedule, Aperiodic):
+            raise ValueError(
+                "Topology needs realizations=... unless the schedule is "
+                "Aperiodic (which draws them per step)")
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "n", int(n))
+        object.__setattr__(self, "max_degree", int(max_degree))
+        object.__setattr__(self, "realizations", realizations)
+        object.__setattr__(self, "schedule", schedule)
+
+    # -- realization IR accessors ---------------------------------------------
+
+    def realization(self, step: int = 0) -> Realization:
+        """The IR node describing step ``step``'s gossip round."""
+        if isinstance(self.schedule, Aperiodic):
+            return self.schedule.draw(step)
+        return self.realizations[self.schedule.index(step)]
+
+    def realization_types(self) -> frozenset:
+        """IR node types this topology realizes.  For :class:`Aperiodic`
+        schedules this samples ``draw(0)`` (draws are homogeneous by
+        construction for every family here)."""
+        if self.realizations is not None:
+            return frozenset(type(r) for r in self.realizations)
+        return frozenset({type(self.realization(0))})
+
+    # -- legacy-compatible accessors ------------------------------------------
+
+    @property
+    def period(self) -> int | None:
+        """Steps before the schedule repeats (None when aperiodic)."""
+        return self.schedule.period
+
+    @property
+    def time_varying(self) -> bool:
+        return not isinstance(self.schedule, Static)
+
+    @property
+    def neighbor_schedule(self):
+        """DEPRECATED read shim: ``step -> (self_weight, [(shift, w), ...])``
+        when every realization is a circulant :class:`Shifts`, else None.
+        Use :meth:`realization` instead."""
+        if self.realization_types() != frozenset({Shifts}):
+            return None
+        warnings.warn(
+            "Topology.neighbor_schedule is deprecated; pattern-match "
+            "Topology.realization(step) (a Shifts IR node) instead",
+            DeprecationWarning, stacklevel=2)
+
+        def sched(k: int):
+            r = self.realization(k)
+            return r.self_w, list(r.shifts)
+
+        return sched
 
     def weights(self, step: int = 0) -> np.ndarray:
-        return self.weights_fn(step % self.period if self.period > 0 else 0)
+        """Densified ``W^{(step)}`` (analysis/reference path)."""
+        return self.realization(step).dense(self.n)
 
     def all_weights(self) -> list[np.ndarray]:
+        if self.period is None:
+            raise AperiodicScheduleError(
+                f"{self.name!r} has an aperiodic schedule "
+                f"({self.schedule!r}); there is no finite matrix list")
         return [self.weights(k) for k in range(self.period)]
 
     def iter_weights(self) -> Iterator[np.ndarray]:
@@ -99,6 +430,12 @@ class Topology:
         while True:
             yield self.weights(k)
             k += 1
+
+
+def _static(name: str, n: int, realization: Realization,
+            max_degree: int) -> Topology:
+    return Topology(name, n, max_degree=max_degree,
+                    realizations=(realization,), schedule=Static())
 
 
 # ---------------------------------------------------------------------------
@@ -113,21 +450,19 @@ def ring(n: int) -> Topology:
     if n <= 2:  # degenerate: fully connected
         adj = ~np.eye(n, dtype=bool)
     W = _metropolis(adj)
-    # ring is a circulant: shifts +-1 with equal weights (n>=3, uniform degree)
-    w_off = W[0, 1]
-    sched = None
     if n >= 3:
-        sched = lambda k: (1.0 - 2 * w_off, [(1, w_off), (-1, w_off)])  # noqa: E731
-    return Topology("ring", n, 1, 2 if n >= 3 else max(n - 1, 0), lambda k: W,
-                    neighbor_schedule=sched)
+        # ring is a circulant: shifts +-1 with equal weights
+        w_off = W[0, 1]
+        real = Shifts(1.0 - 2 * w_off, ((1, w_off), (-1, w_off)))
+        return _static("ring", n, real, 2)
+    return _static("ring", n, Dense(W), max(n - 1, 0))
 
 
 def star(n: int) -> Topology:
     """Undirected star (node 0 is the hub); Metropolis weights."""
     adj = np.zeros((n, n), dtype=bool)
     adj[0, 1:] = adj[1:, 0] = True
-    W = _metropolis(adj)
-    return Topology("star", n, 1, n - 1, lambda k: W)
+    return _static("star", n, Dense(_metropolis(adj)), n - 1)
 
 
 def _grid_dims(n: int) -> tuple[int, int]:
@@ -148,8 +483,7 @@ def grid_2d(n: int) -> Topology:
                 adj[u, (i + 1) * c + j] = adj[(i + 1) * c + j, u] = True
             if j + 1 < c:
                 adj[u, i * c + j + 1] = adj[i * c + j + 1, u] = True
-    W = _metropolis(adj)
-    return Topology("grid", n, 1, 4, lambda k: W)
+    return _static("grid", n, Dense(_metropolis(adj)), 4)
 
 
 def torus_2d(n: int) -> Topology:
@@ -162,8 +496,7 @@ def torus_2d(n: int) -> Topology:
             for v in (((i + 1) % r) * c + j, i * c + (j + 1) % c):
                 if v != u:
                     adj[u, v] = adj[v, u] = True
-    W = _metropolis(adj)
-    return Topology("torus", n, 1, 4, lambda k: W)
+    return _static("torus", n, Dense(_metropolis(adj)), 4)
 
 
 def half_random(n: int, seed: int = 0) -> Topology:
@@ -180,7 +513,7 @@ def half_random(n: int, seed: int = 0) -> Topology:
     W = adj.astype(np.float64) / d_max
     np.fill_diagonal(W, 1.0 - W.sum(axis=1))
     deg = int(adj.sum(axis=1).max())
-    return Topology("half_random", n, 1, deg, lambda k: W)
+    return _static("half_random", n, Dense(W), deg)
 
 
 def hypercube(n: int) -> Topology:
@@ -195,7 +528,7 @@ def hypercube(n: int) -> Topology:
         W[i, i] = w
         for t in range(tau):
             W[i, i ^ (1 << t)] = w
-    return Topology("hypercube", n, 1, tau, lambda k: W)
+    return _static("hypercube", n, Dense(W), tau)
 
 
 def static_exponential(n: int) -> Topology:
@@ -207,26 +540,13 @@ def static_exponential(n: int) -> Topology:
     even n (Proposition 1).
     """
     if n == 1:
-        W1 = np.ones((1, 1))
-        return Topology("static_exp", 1, 1, 0, lambda k: W1)
+        return _static("static_exp", 1, Dense(np.ones((1, 1))), 0)
     tau = int(math.ceil(math.log2(n)))
     offsets = sorted({(2 ** t) % n for t in range(tau)} - {0})
     w = 1.0 / (len(offsets) + 1)
-    W = np.zeros((n, n), dtype=np.float64)
-    for i in range(n):
-        W[i, i] = w
-        for off in offsets:
-            W[i, (i + off) % n] += w
-    def weights_fn(k: int, W=W) -> np.ndarray:
-        return W
-
-    def schedule(k: int) -> tuple[float, list[tuple[int, float]]]:
-        # node i sends to (i + s) mod n <=> node i receives from (i - s).
-        # W[i, i+off] = w means i receives from i+off => shift s = -off.
-        return (w, [(-off, w) for off in offsets])
-
-    return Topology("static_exp", n, 1, len(offsets), weights_fn,
-                    neighbor_schedule=schedule)
+    # node i receives from i + off  =>  send shift s = -off
+    real = Shifts(w, tuple((-off, w) for off in offsets))
+    return _static("static_exp", n, real, len(offsets))
 
 
 # ---------------------------------------------------------------------------
@@ -241,127 +561,201 @@ def one_peer_exponential(
     W^{(k)}_{ij} = 1/2 if log2(mod(j - i, n)) == mod(k, tau), 1/2 if i == j.
     ``schedule`` selects the order the tau realizations are visited:
       - "cyclic": k -> mod(k, tau)              (paper main body; Lemma 1)
-      - "random_perm": without-replacement shuffles per period (Remark 5: still
-        exactly averages each period)
+      - "random_perm": without-replacement shuffles per period (Remark 5:
+        still exactly averages each period) -- a :class:`RandomPerm`
+        schedule over the same finite realization set.
       - "uniform": with replacement (Remark 5 / App. B.3.2: exact averaging
-        only asymptotically)
+        only asymptotically) -- an :class:`Aperiodic` draw.
     """
     if n == 1:
-        W1 = np.ones((1, 1))
-        return Topology("one_peer_exp", 1, 1, 0, lambda k: W1)
+        return _static("one_peer_exp", 1, Dense(np.ones((1, 1))), 0)
     tau = int(math.ceil(math.log2(n)))
-    mats = []
-    for t in range(tau):
-        off = (2 ** t) % n
-        W = np.zeros((n, n), dtype=np.float64)
-        for i in range(n):
-            W[i, i] += 0.5
-            W[i, (i + off) % n] += 0.5
-        mats.append(W)
+    reals = tuple(Shifts(0.5, ((-((2 ** t) % n), 0.5),)) for t in range(tau))
 
     if schedule == "cyclic":
-        order_fn = lambda k: k % tau  # noqa: E731
-        period = tau
-        time_varying = True
+        sched: Schedule = Cyclic(tau)
     elif schedule == "random_perm":
-        rng = np.random.default_rng(seed)
-        # Deterministic pseudo-random permutation stream (reproducible).
-        perms: list[np.ndarray] = []
-
-        def order_fn(k: int) -> int:
-            p = k // tau
-            while len(perms) <= p:
-                perms.append(rng.permutation(tau))
-            return int(perms[p][k % tau])
-
-        period = tau
-        time_varying = True
+        sched = RandomPerm(tau, seed)
     elif schedule == "uniform":
         rng = np.random.default_rng(seed)
         draws: list[int] = []
 
-        def order_fn(k: int) -> int:
+        def draw(k: int) -> Realization:
             while len(draws) <= k:
                 draws.append(int(rng.integers(tau)))
-            return draws[k]
+            return reals[draws[k]]
 
-        period = tau
-        time_varying = True
+        sched = Aperiodic(draw)
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
 
-    def weights_fn(k: int) -> np.ndarray:
-        return mats[order_fn(k)]
-
-    def sched(k: int) -> tuple[float, list[tuple[int, float]]]:
-        t = order_fn(k)
-        off = (2 ** t) % n
-        return (0.5, [(-off, 0.5)])
-
     name = "one_peer_exp" if schedule == "cyclic" else f"one_peer_exp_{schedule}"
-    top = Topology(name, n, period, 1, weights_fn, neighbor_schedule=sched,
-                   time_varying=time_varying)
-    # NB: weights() applies mod(period); for random schedules order_fn already
-    # consumes the raw step, so bypass the mod by storing period accordingly.
-    if schedule != "cyclic":
-        top = dataclasses.replace(top, period=1 << 30)
-    return top
+    return Topology(name, n, max_degree=1,
+                    realizations=None if schedule == "uniform" else reals,
+                    schedule=sched)
+
+
+def _hypercube_matchings(n: int) -> tuple:
+    tau = int(round(math.log2(n)))
+    if 2 ** tau != n:
+        raise ValueError(f"one_peer_hypercube requires n=2^tau, got {n}")
+    return tuple(
+        Matching(tuple(i ^ (1 << t) for i in range(n)), 0.5)
+        for t in range(tau))
 
 
 def one_peer_hypercube(n: int) -> Topology:
     """One-peer hypercube (Remark 6, [54]): at step k each node pairs with
     its bit-flip neighbor i ^ 2^{mod(k, tau)} and they average.  Undirected
     and SYMMETRIC (unlike the one-peer exponential graph), requires n = 2^tau.
-    Also achieves exact averaging after tau steps."""
-    tau = int(round(math.log2(n)))
-    if 2 ** tau != n:
-        raise ValueError(f"one_peer_hypercube requires n=2^tau, got {n}")
-    mats = []
-    for t in range(tau):
-        W = np.zeros((n, n), dtype=np.float64)
-        for i in range(n):
-            W[i, i] = 0.5
-            W[i, i ^ (1 << t)] = 0.5
-        mats.append(W)
+    Also achieves exact averaging after tau steps.
 
-    def weights_fn(k: int) -> np.ndarray:
-        return mats[k % tau]
-
-    # pairing i <-> i ^ 2^t is NOT a uniform circulant shift, so there is no
-    # single-shift schedule; the production path uses the dense route (or a
-    # masked pair of shifts). Kept dense for clarity.
-    return Topology("one_peer_hypercube", n, tau, 1, weights_fn,
-                    time_varying=True)
+    Each realization is a :class:`Matching` -- ONE explicit-pairs
+    collective-permute on the wire (the XOR pairing is not a circulant, so
+    the old dense route paid an O(n) all-gather for a degree-1 graph)."""
+    reals = _hypercube_matchings(n)
+    return Topology("one_peer_hypercube", n, max_degree=1,
+                    realizations=reals, schedule=Cyclic(len(reals)))
 
 
 def bipartite_random_match(n: int, seed: int = 0) -> Topology:
     """Bipartite random match graph (App. A.3.1): random perfect matching per
-    step; matched pairs average (w=1/2 each). Requires even n."""
+    step; matched pairs average (w=1/2 each). Requires even n.
+
+    An :class:`Aperiodic` schedule drawing a fresh :class:`Matching` per
+    step -- stateless, seeded by ``(seed, k)``: reproducible AND O(1)
+    memory over arbitrarily long runs."""
     if n % 2:
         raise ValueError("bipartite_random_match requires even n")
 
-    def weights_fn(k: int) -> np.ndarray:
-        # Stateless per-step draw, seeded by (seed, k): reproducible AND
-        # O(1) memory -- the trainer realizes W^{(k)} every step of an
-        # arbitrarily long run, so memoizing each (n, n) matrix forever
-        # would grow host RAM without bound.
+    def draw(k: int) -> Realization:
         rng = np.random.default_rng((seed, k))
         perm = rng.permutation(n)
-        W = np.zeros((n, n), dtype=np.float64)
+        partner = np.empty(n, dtype=np.int64)
         for j in range(n // 2):
-            a, b = perm[2 * j], perm[2 * j + 1]
-            W[a, a] = W[b, b] = 0.5
-            W[a, b] = W[b, a] = 0.5
-        return W
+            a, b = int(perm[2 * j]), int(perm[2 * j + 1])
+            partner[a], partner[b] = b, a
+        return Matching(tuple(partner), 0.5)
 
-    return Topology("random_match", n, 1 << 30, 1, weights_fn,
-                    time_varying=True)
+    return Topology("random_match", n, max_degree=1,
+                    schedule=Aperiodic(draw))
+
+
+def _factorize(n: int, kmax: int) -> list[int]:
+    """Greedy largest-first factorization of ``n`` into factors <= kmax."""
+    if n < 2:
+        return []
+    fs, m = [], n
+    while m > 1:
+        for f in range(min(kmax, m), 1, -1):
+            if m % f == 0:
+                fs.append(f)
+                m //= f
+                break
+        else:
+            raise ValueError(
+                f"n={n} has a prime factor > {kmax}; pick a larger k")
+    return fs
+
+
+def base_k(n: int, k: int | None = None) -> Topology:
+    """Finite-time Base-(k+1) graph (Takezawa et al., 2023): the k-peer
+    hyper-hypercube core.  Factor ``n = f_1 * ... * f_L`` with every
+    ``f_i <= k + 1``; identify node ``i`` with its mixed-radix digits and at
+    round ``t`` average each clique of nodes differing only in digit ``t``
+    (uniform weight ``1/f_t``).  The product of one period's matrices is
+    EXACTLY ``(1/n) 1 1^T`` -- finite-time exact averaging at max degree
+    ``k`` for every n whose prime factors are all ``<= k + 1`` (k=1
+    recovers the one-peer hypercube; n=9,k=2 works where no power-of-2
+    family exists).
+
+    Rounds with ``f_t = 2`` are :class:`Matching` realizations (one
+    collective-permute); ``f_t >= 3`` cliques fall back to :class:`Dense`.
+    The general Base-(k+1) composition for n with large prime factors
+    (Takezawa et al.'s Algorithm 2) is future work.
+
+    ``k=None`` auto-selects the smallest degree that factors ``n``
+    (largest prime factor minus one): k=1 for powers of two, k=2 for
+    n=9, ...
+    """
+    if n == 1:
+        return _static("base_k", 1, Dense(np.ones((1, 1))), 0)
+    if k is None:
+        p, m, f = 2, n, 2
+        while m > 1:
+            while m % f == 0:
+                p, m = f, m // f
+            f += 1 if f == 2 else 2
+            if f * f > m and m > 1:
+                p, m = m, 1
+        k = p - 1
+    if k < 1:
+        raise ValueError(f"base_k needs k >= 1, got {k}")
+    factors = _factorize(n, k + 1)
+    reals = []
+    stride = 1
+    for f in factors:
+        # digit value of node i at this radix position: (i // stride) % f
+        if f == 2:
+            partner = tuple(
+                i + stride if (i // stride) % 2 == 0 else i - stride
+                for i in range(n))
+            reals.append(Matching(partner, 0.5))
+        else:
+            W = np.zeros((n, n), dtype=np.float64)
+            for i in range(n):
+                d = (i // stride) % f
+                base = i - d * stride
+                for dd in range(f):
+                    W[i, base + dd * stride] = 1.0 / f
+            reals.append(Dense(W))
+        stride *= f
+    return Topology(f"base_{k + 1}", n, max_degree=max(factors) - 1,
+                    realizations=tuple(reals), schedule=Cyclic(len(reals)))
+
+
+def ceca(n: int) -> Topology:
+    """CECA-style finite-time circulant schedule (cf. DSGD-CECA, Ding et
+    al., 2023): exact average in ``L`` rounds for ANY ``n`` using only
+    circulant shift rounds.
+
+    Factor ``n = f_1 * ... * f_L`` into prime factors; round ``t`` mixes
+    ``W_t = (1/f_t) sum_{j=0}^{f_t-1} P^{j m_t}`` with ``m_t`` the prefix
+    product of earlier factors.  In the circulant polynomial algebra the
+    product over one period telescopes the mixed-radix expansion of
+    ``0..n-1``, so ``prod_t W_t = (1/n) 1 1^T`` exactly.  Total sends per
+    period = ``sum (f_t - 1)`` -- Omega(log n) for smooth n, matching
+    one-peer exponential exactly when ``n = 2^p`` (DSGD-CECA reaches
+    ceil(log2 n)+O(1) for every n; this circulant variant degrades toward
+    one dense-degree round as n approaches a prime).
+
+    Every realization is a :class:`Shifts` node: the one-permute-per-shift
+    wire path, unlike :func:`base_k`'s clique (Matching/Dense) rounds.
+    """
+    if n == 1:
+        return _static("ceca", 1, Dense(np.ones((1, 1))), 0)
+    factors, m, f = [], n, 2                     # prime factors, ascending
+    while m > 1:
+        while m % f == 0:
+            factors.append(f)
+            m //= f
+        f += 1 if f == 2 else 2
+        if f * f > m and m > 1:
+            factors.append(m)
+            break
+    reals = []
+    stride = 1
+    for f in factors:
+        reals.append(Shifts(
+            1.0 / f, tuple((-(j * stride), 1.0 / f) for j in range(1, f))))
+        stride *= f
+    return Topology("ceca", n, max_degree=max(factors) - 1,
+                    realizations=tuple(reals), schedule=Cyclic(len(reals)))
 
 
 def full_averaging(n: int) -> Topology:
     """Complete graph with uniform weights: W = (1/n) 1 1^T (parallel SGD)."""
-    W = np.full((n, n), 1.0 / n)
-    return Topology("full", n, 1, n - 1, lambda k: W)
+    return _static("full", n, Dense(np.full((n, n), 1.0 / n)), n - 1)
 
 
 TOPOLOGIES: dict[str, Callable[..., Topology]] = {
@@ -375,6 +769,8 @@ TOPOLOGIES: dict[str, Callable[..., Topology]] = {
     "one_peer_exp": one_peer_exponential,
     "one_peer_hypercube": one_peer_hypercube,
     "random_match": bipartite_random_match,
+    "base_k": base_k,
+    "ceca": ceca,
     "full": full_averaging,
 }
 

@@ -105,6 +105,10 @@ class Transform:
     init: Callable[[PyTree], dict] | None = None
     apply: Callable[[Context], None] | None = None
     tag: str | None = None
+    # declarative gossip metadata (set by :func:`gossip`): which tensors
+    # are mixed, and how often (every=k -> Identity realization off-steps)
+    where: tuple = ()
+    every: int = 1
 
 
 def _f32(x):
@@ -156,14 +160,22 @@ def scale_by_lr(momentum: str = "m", *, out: str = "x_next") -> Transform:
     return Transform(f"scale_by_lr({momentum})", (), None, apply)
 
 
-def gossip(where: tuple = ("x_next",)) -> Transform:
+def gossip(where: tuple = ("x_next",), every: int = 1) -> Transform:
     """Partially average the named tensors with this step's ``W^{(k)}``.
 
     All tensors in one ``where`` tuple are mixed as a SINGLE pytree, so the
     flat-buffer engine packs them into one buffer per dtype group: for f32
     payloads over the one-peer exponential graph that is exactly ONE
-    collective-permute regardless of how many tensors are listed."""
+    collective-permute regardless of how many tensors are listed.
+
+    ``every=k`` communicates only every k-th step (local-SGD-style): the
+    off-steps realize as the ``Identity`` IR node -- ZERO wire bytes, one
+    shared compiled executable -- and the topology's schedule advances one
+    realization per *communicating* step (so e.g. one-peer exponential
+    still exactly averages after tau communications, Lemma 1)."""
     where = tuple(where)
+    if every < 1:
+        raise ValueError(f"gossip(every=...) needs every >= 1, got {every}")
 
     def apply(ctx):
         if len(where) == 1:
@@ -173,7 +185,8 @@ def gossip(where: tuple = ("x_next",)) -> Transform:
         for k, v in zip(where, mixed):
             ctx.tensors[k] = v
 
-    return Transform(f"gossip{where}", (), None, apply)
+    name = f"gossip{where}" + (f"@every{every}" if every > 1 else "")
+    return Transform(name, (), None, apply, where=where, every=every)
 
 
 
@@ -297,6 +310,32 @@ class DecentralizedOptimizer:
         return None
 
     @property
+    def gossip_every(self) -> int:
+        """Communication interval: k from ``gossip(where=..., every=k)``
+        (1 when every step communicates).  All gossip transforms in one
+        chain share ONE interval -- the realization (and hence ctx.mix) is
+        resolved once per step, so mixed ``every`` values cannot be
+        honored and are rejected at :func:`chain` time."""
+        vals = {t.every for t in self.transforms if t.where}
+        if len(vals) > 1:
+            raise ValueError(
+                f"chain {self.name!r} mixes gossip(every=...) intervals "
+                f"{sorted(vals)}; all gossip transforms in one chain share "
+                "one realization per step, so they must agree on every=")
+        return vals.pop() if vals else 1
+
+    @property
+    def gossip_where(self) -> tuple:
+        """Union of tensor names the chain's gossip transforms mix (what
+        the wire payload is made of -- roofline accounting reads this)."""
+        names: list = []
+        for t in self.transforms:
+            for w in t.where:
+                if w not in names:
+                    names.append(w)
+        return tuple(names)
+
+    @property
     def slot_names(self) -> tuple:
         names: list = []
         for t in self.transforms:
@@ -364,11 +403,12 @@ class DecentralizedOptimizer:
         if isinstance(step, (int, np.integer)):
             from .plan import GossipPlan
             return GossipPlan.for_optimizer(self).mix(int(step))
-        if self.warmup_steps:
+        if self.warmup_steps or self.gossip_every > 1:
             raise ValueError(
-                "allreduce_warmup needs static-int steps (the warm-up phase "
-                "is a compile-time property); drive warm-up through "
-                "GossipPlan or pass python-int steps")
+                "allreduce_warmup / gossip(every=k) need static-int steps "
+                "(the phase and the skipped rounds are compile-time "
+                "properties); drive them through GossipPlan or pass "
+                "python-int steps")
         return lambda t: gossip_mod.mix_switch(t, self.topology, step)
 
 
@@ -387,6 +427,7 @@ def chain(*transforms, topology: Topology, name: str = "chain",
         raise ValueError(
             f"chain {name!r} declares no state slots; every optimizer needs "
             "at least one (e.g. trace_momentum)")
+    opt.gossip_every   # fail fast on mixed gossip(every=...) intervals
     return opt
 
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.core import gossip as gossip_mod  # noqa: E402
 from repro.core import optim as optim_mod  # noqa: E402
 from repro.core import plan as plan_mod  # noqa: E402
 from repro.core import topology as topo_mod  # noqa: E402
@@ -129,10 +130,20 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
                                         micro_batch=layout.get("micro"),
                                         grads_dtype=grads_dtype)
         # GossipPlan resolves the phase's realization into a mixing
-        # executor (static shifts -> collective-permute HLO); the dry-run
+        # executor (static shifts -> collective-permute HLO; matchings ->
+        # one explicit-pairs permute via the node mesh axis); the dry-run
         # keeps its own jit for the sharding/donation annotations.
-        plan = plan_mod.GossipPlan.for_optimizer(opt)
+        plan = plan_mod.GossipPlan.for_optimizer(opt, mesh=mesh)
         fn = partial(step_fn, plan.mix(gossip_phase))
+        # roofline wire accounting straight off the realization IR: what
+        # this phase's round SHOULD cost per node, before looking at HLO.
+        ir = gossip_mod.gossip_spec(top, gossip_phase,
+                                    compression=opt.compression)
+        bytes_per_elem = 1 if opt.compression == "int8" else 4
+        ir["payload_bytes_per_node"] = int(
+            bytes_per_elem * meta["n_params"] * max(len(opt.gossip_where), 1)
+            * ir["wire_multiplier"])
+        meta["gossip_ir"] = ir
         in_shardings = (p_specs, state_specs, bspec, P())
         out_shardings = (p_specs, state_specs, P())
         jitted = jax.jit(fn, in_shardings=sharding.named(in_shardings, mesh),

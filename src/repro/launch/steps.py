@@ -133,10 +133,12 @@ def make_train_step(cfg: M.ModelConfig,
 
     ``mix`` is the realization-bound gossip executor (the first, Python-
     level argument): :class:`repro.core.plan.GossipPlan` compiles one
-    executable per distinct realization, closing over that realization's
-    ``mix`` -- static schedules bake their shifts into collective-permute
-    HLO, dense time-varying schedules receive ``W^{(k)}`` as a traced
-    argument inside the plan's shared executable.
+    executable per distinct realization-IR node, closing over that
+    realization's ``mix`` -- ``Shifts``/``Matching`` rounds bake their
+    (explicit-pairs) collective-permutes into HLO, time-varying ``Dense``
+    rounds receive ``W^{(k)}`` as a traced argument inside the plan's
+    shared executable, and ``Identity`` off-steps (``gossip(every=k)``)
+    share one no-communication executable.
 
     Gradients are computed per node (vmap over the leading node axis) with
     optional microbatch accumulation, then fed to the decentralized

@@ -27,14 +27,18 @@ from repro.launch import steps as steps_mod
 
 
 def build_trainer(cfg, topology, optimizer_name: str, beta: float,
-                  micro_batch=None, momentum_dtype=None, warmup_steps=0):
+                  micro_batch=None, momentum_dtype=None, warmup_steps=0,
+                  mesh=None):
     """Returns (opt, step_for) where ``step_for(step)`` is the compiled
     train-step callable for that step's gossip realization.
 
-    All schedule handling (static / neighbor-schedule / dense-traced
-    regimes, warm-up phase keying, realization-keyed compile cache) lives
-    in :class:`repro.core.plan.GossipPlan`; this is just optimizer + step
-    function + plan wiring.
+    All schedule handling (realization-IR classification -- Shifts /
+    Matching / Dense / Identity -- warm-up phase keying, realization-keyed
+    compile cache) lives in :class:`repro.core.plan.GossipPlan`; this is
+    just optimizer + step function + plan wiring.  Pass a ``mesh`` whose
+    ``node`` axis matches the node count to lower Matching rounds
+    (one_peer_hypercube, random_match, base_k) to one explicit-pairs
+    collective-permute; without it they run as local gathers.
     """
     opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta,
                                    momentum_dtype=momentum_dtype)
@@ -42,7 +46,7 @@ def build_trainer(cfg, topology, optimizer_name: str, beta: float,
         from repro.core.transforms import allreduce_warmup
         opt = allreduce_warmup(warmup_steps)(opt)
     step_fn = steps_mod.make_train_step(cfg, opt, micro_batch=micro_batch)
-    plan = GossipPlan.for_optimizer(opt, fn=step_fn)
+    plan = GossipPlan.for_optimizer(opt, fn=step_fn, mesh=mesh)
     return opt, plan.step_fn
 
 
@@ -131,7 +135,10 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--nodes", type=int, default=8)
-    ap.add_argument("--topology", default="one_peer_exp")
+    ap.add_argument("--topology", default="one_peer_exp",
+                    choices=sorted(topo_mod.TOPOLOGIES),
+                    help="gossip graph; base_k/ceca are the finite-time "
+                         "families (Takezawa 23 / cf. Ding 23)")
     ap.add_argument("--optimizer", default="dmsgd")
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--steps", type=int, default=100)

@@ -81,10 +81,11 @@ def test_flat_mix_bit_identical_to_per_leaf(name, kw, compression, n=8):
     historical one-roll-per-leaf path, for every neighbor-schedule topology
     and for the quantized payload (per-leaf scales preserved)."""
     top = topology.get_topology(name, n, **kw)
-    assert top.neighbor_schedule is not None
+    assert top.realization_types() == frozenset({topology.Shifts})
     tree = _tree(n, seed=5)
     for step in range(5):
-        self_w, shifts = top.neighbor_schedule(step)
+        r = top.realization(step)
+        self_w, shifts = r.self_w, list(r.shifts)
         got = gossip.mix_shifts(tree, self_w, shifts, compression)
         want = gossip.mix_shifts_per_leaf(tree, self_w, shifts, compression)
         for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
@@ -102,10 +103,11 @@ def test_flat_mix_bit_identical_to_per_leaf(name, kw, compression, n=8):
 )
 def test_flat_mix_bit_identical_property(name, n, step, seed):
     top = topology.get_topology(name, n)
-    if top.neighbor_schedule is None:
+    r = top.realization(step)
+    if not isinstance(r, topology.Shifts):
         return
     tree = _tree(n, seed=seed)
-    self_w, shifts = top.neighbor_schedule(step)
+    self_w, shifts = r.self_w, list(r.shifts)
     got = gossip.mix_shifts(tree, self_w, shifts)
     want = gossip.mix_shifts_per_leaf(tree, self_w, shifts)
     for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
@@ -138,9 +140,17 @@ def test_gossip_spec_packed_accounting():
     f32b, bf16b = [g.padded * jnp.dtype(g.dtype).itemsize
                    for g in layout.groups]
     assert spec["bytes_per_node_per_step"] == f32b + bf16b
-    # layout=None keeps the legacy dict exactly (consumed by == asserts)
+    # layout=None keeps the structural dict (consumed by == asserts)
     legacy = gossip.gossip_spec(topology.one_peer_exponential(8), 0)
-    assert legacy == {"kind": "ppermute", "rounds": 1, "shifts": [-1]}
+    assert legacy == {"kind": "ppermute", "rounds": 1, "shifts": [-1],
+                      "wire_multiplier": 1}
+    # matchings report true 1-permute bytes; dense all-gathers O(n)
+    match = gossip.gossip_spec(topology.bipartite_random_match(8), 0,
+                               layout=layout)
+    assert match["bytes_per_node_per_step"] == f32b + bf16b
+    assert match["collectives_per_step"] == 2        # 1 permute x 2 groups
+    dense = gossip.gossip_spec(topology.star(8), 0, layout=layout)
+    assert dense["bytes_per_node_per_step"] == (f32b + bf16b) * 7
 
 
 # --- HLO inspection: one collective-permute per shift per dtype group -------
@@ -164,13 +174,26 @@ _HLO_SCRIPT = textwrap.dedent("""
     shard = jax.tree.map(lambda _: sh, tree)
     for name in ("one_peer_exp", "static_exp"):
         top = topology.get_topology(name, n)
-        _, shifts = top.neighbor_schedule(0)
+        shifts = top.realization(0).shifts
         f = jax.jit(lambda t: gossip.mix(t, top, 0),
                     in_shardings=(shard,), out_shardings=shard)
         txt = f.lower(tree).compile().as_text()
         got = analyze_hlo(txt).collective_counts.get("collective-permute", 0)
         want = len(shifts) * 2          # per shift per DTYPE GROUP, not leaf
         assert got == want, (name, got, want)
+
+    # ANY matching (arbitrary pairing, not just circulants) is ONE
+    # explicit-pairs collective-permute per dtype group -- and NO all-gather
+    # of the packed buffer (the old dense route paid O(n) bytes here).
+    for name in ("one_peer_hypercube", "random_match"):
+        top = topology.get_topology(name, n)
+        for step in (0, 1):
+            f = jax.jit(lambda t, _s=step: gossip.mix(t, top, _s, mesh=mesh),
+                        in_shardings=(shard,), out_shardings=shard)
+            cost = analyze_hlo(f.lower(tree).compile().as_text())
+            got = cost.collective_counts.get("collective-permute", 0)
+            assert got == 2, (name, step, got)     # 1 per dtype group
+            assert cost.collective_counts.get("all-gather", 0) == 0, name
 
     # full DmSGD update: the fused (beta m + g, x - gamma m) payload is one
     # f32 buffer => one-peer exponential costs EXACTLY ONE permute per step.

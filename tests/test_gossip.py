@@ -89,10 +89,63 @@ def test_mix_switch_matches_static(n=8):
 
 def test_gossip_spec_counts():
     assert gossip.gossip_spec(topology.one_peer_exponential(16), 0) == {
-        "kind": "ppermute", "rounds": 1, "shifts": [-1]}
+        "kind": "ppermute", "rounds": 1, "shifts": [-1],
+        "wire_multiplier": 1}
     s = gossip.gossip_spec(topology.static_exponential(16), 0)
     assert s["kind"] == "ppermute" and s["rounds"] == 4
-    assert gossip.gossip_spec(topology.star(16), 0)["kind"] == "dense"
+    assert s["wire_multiplier"] == 4
+    # dense fallback all-gathers the packed buffer: O(n) bytes per node
+    # regardless of the realization's fan-in (the old accounting reported
+    # max_degree payloads -- 1x for random_match, 15x for star).
+    s = gossip.gossip_spec(topology.star(16), 0)
+    assert s["kind"] == "dense" and s["wire_multiplier"] == 15
+    # ... while a matching is truly ONE payload on the wire.
+    s = gossip.gossip_spec(topology.bipartite_random_match(16), 0)
+    assert s == {"kind": "matching", "rounds": 1, "paired_nodes": 16,
+                 "wire_multiplier": 1}
+    s = gossip.gossip_spec(topology.one_peer_hypercube(16), 3)
+    assert s["kind"] == "matching" and s["wire_multiplier"] == 1
+    assert gossip.gossip_spec(topology.ceca(12), 1)["kind"] == "ppermute"
+
+
+@pytest.mark.parametrize("name,n", [("random_match", 8), ("random_match", 16),
+                                    ("one_peer_hypercube", 8),
+                                    ("one_peer_hypercube", 16),
+                                    ("base_k", 16)])
+def test_matching_path_bit_identical_to_dense(name, n):
+    """The explicit-pairs matching path == mix_dense with the realized W,
+    BIT for bit (w=0.5 is exact in f32 and adding structural zeros in the
+    einsum is exact)."""
+    top = topology.get_topology(name, n)
+    tree = _rand_tree(n, seed=7)
+    for step in range(4):
+        r = top.realization(step)
+        assert isinstance(r, topology.Matching)
+        got = gossip.mix_matching(tree, r.partner, r.w_self)
+        want = gossip.mix_dense(tree, jnp.asarray(r.dense(n)))
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mix_switch_typed_aperiodic_error():
+    """mix_switch refuses aperiodic schedules with a typed error naming
+    the schedule object (no more period sentinel / phase-cap heuristics)."""
+    tree = {"x": jnp.zeros((8, 4))}
+    for top in (topology.bipartite_random_match(8),
+                topology.one_peer_exponential(8, schedule="random_perm"),
+                topology.one_peer_exponential(8, schedule="uniform")):
+        with pytest.raises(gossip.AperiodicScheduleError,
+                           match=type(top.schedule).__name__):
+            gossip.mix_switch(tree, top, jnp.asarray(0))
+    # periodic matchings DO switch (each branch keeps its static pairing)
+    top = topology.one_peer_hypercube(8)
+    f = jax.jit(lambda t, s: gossip.mix_switch(t, top, s))
+    for step in range(4):
+        got = f(tree | {"x": jnp.arange(32, dtype=jnp.float32)
+                        .reshape(8, 4)}, jnp.asarray(step))
+        want = gossip.mix({"x": jnp.arange(32, dtype=jnp.float32)
+                           .reshape(8, 4)}, top, step)
+        np.testing.assert_allclose(got["x"], want["x"], rtol=1e-6)
 
 
 def test_int8_compressed_gossip():

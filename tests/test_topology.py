@@ -235,12 +235,15 @@ def test_transient_iteration_ordering():
 
 def test_one_peer_hypercube_exact_averaging():
     """Remark 6: the symmetric one-peer hypercube also exactly averages in
-    tau steps; each realization is symmetric (unlike one-peer exponential)."""
+    tau steps; each realization is symmetric (unlike one-peer exponential)
+    and a first-class Matching IR node."""
     for n in (4, 8, 16, 32):
         top = topology.one_peer_hypercube(n)
         tau = int(math.log2(n))
         P = np.eye(n)
         for k in range(tau):
+            r = top.realization(k)
+            assert isinstance(r, topology.Matching)
             W = top.weights(k)
             assert np.allclose(W, W.T)           # symmetric
             assert _is_doubly_stochastic(W)
@@ -248,3 +251,130 @@ def test_one_peer_hypercube_exact_averaging():
         np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
     with pytest.raises(ValueError):
         topology.one_peer_hypercube(6)
+
+
+# ---------------------------------------------------------------------------
+# Realization IR + finite-time families from the follow-up literature
+# ---------------------------------------------------------------------------
+
+def _finite_time_exact(top, steps):
+    """Product of one period's realization matrices == (1/n) 1 1^T."""
+    n = top.n
+    P = np.eye(n)
+    for k in range(steps):
+        W = top.weights(k)
+        assert _is_doubly_stochastic(W), (top.name, k)
+        P = W @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+
+
+@pytest.mark.parametrize("n,k", [(4, 1), (8, 1), (9, 2), (16, 1), (16, 3),
+                                 (12, 2), (27, 2)])
+def test_base_k_finite_time_exact_averaging(n, k):
+    """Takezawa et al. 2023: the Base-(k+1) (k-peer hyper-hypercube) graph
+    exactly averages in one period at max degree k, for every n whose prime
+    factors are all <= k+1 -- including n=9, where no power-of-two family
+    exists."""
+    top = topology.base_k(n, k)
+    assert top.max_degree <= k
+    _finite_time_exact(top, top.period)
+    # any period-aligned window works, like Lemma 1's eq. (8) for one-peer
+    P = np.eye(n)
+    for s in range(top.period, 3 * top.period):
+        P = top.weights(s) @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+
+
+def test_base_k_rejects_large_prime_factors():
+    with pytest.raises(ValueError, match="prime factor"):
+        topology.base_k(10, 1)     # 5 > k+1 = 2
+    top = topology.base_k(10, 4)   # [5, 2] works at degree 4
+    _finite_time_exact(top, top.period)
+
+
+@pytest.mark.parametrize("n", [2, 4, 6, 7, 8, 9, 12, 16, 18, 30])
+def test_ceca_finite_time_exact_averaging(n):
+    """CECA-style circulant schedule: exact average in L rounds for ANY n,
+    every realization a Shifts node (the one-permute-per-shift wire path)."""
+    top = topology.ceca(n)
+    for k in range(top.period):
+        assert isinstance(top.realization(k), topology.Shifts)
+    _finite_time_exact(top, top.period)
+
+
+def test_ceca_matches_one_peer_exp_for_powers_of_two():
+    """n = 2^p: the CECA factorization degenerates to exactly the one-peer
+    exponential realization sequence (one send per round)."""
+    for n in (4, 8, 16, 32):
+        c, o = topology.ceca(n), topology.one_peer_exponential(n)
+        assert c.period == o.period
+        for k in range(c.period):
+            np.testing.assert_allclose(c.weights(k), o.weights(k))
+
+
+def test_matching_ir_validates_involution():
+    with pytest.raises(ValueError, match="involution"):
+        topology.Matching((1, 2, 0, 3))
+    r = topology.Matching((1, 0, 3, 2))
+    np.testing.assert_allclose(r.dense(4), [[0.5, 0.5, 0, 0],
+                                            [0.5, 0.5, 0, 0],
+                                            [0, 0, 0.5, 0.5],
+                                            [0, 0, 0.5, 0.5]])
+    # fixed points keep their value
+    r = topology.Matching((0, 2, 1), 0.5)
+    np.testing.assert_allclose(r.dense(3), [[1, 0, 0],
+                                            [0, 0.5, 0.5],
+                                            [0, 0.5, 0.5]])
+
+
+def test_identity_and_schedule_objects():
+    assert np.array_equal(topology.Identity().dense(4), np.eye(4))
+    assert topology.Identity().wire_multiplier(4) == 0
+    assert topology.Cyclic(3).index(7) == 1
+    assert topology.Static().index(123) == 0
+    # RandomPerm: every block visits every realization exactly once
+    rp = topology.RandomPerm(4, seed=1)
+    for block in range(3):
+        assert sorted(rp.index(4 * block + i) for i in range(4)) == [0, 1, 2, 3]
+    assert not rp.is_periodic and rp.period is None
+
+
+def test_random_perm_schedule_exact_each_period():
+    """Remark 5 through the IR: RandomPerm keeps per-period exactness."""
+    top = topology.one_peer_exponential(16, schedule="random_perm", seed=3)
+    tau = 4
+    for period in range(4):
+        P = np.eye(16)
+        for k in range(period * tau, (period + 1) * tau):
+            P = top.weights(k) @ P
+        np.testing.assert_allclose(P, np.ones((16, 16)) / 16, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (one release)
+# ---------------------------------------------------------------------------
+
+def test_legacy_ctor_kwargs_warn_and_work():
+    W = np.full((4, 4), 0.25)
+    with pytest.warns(DeprecationWarning, match="weights_fn"):
+        top = topology.Topology("legacy", 4, 1, 3, lambda k: W)
+    np.testing.assert_allclose(top.weights(0), W)
+    assert isinstance(top.realization(0), topology.Dense)
+    with pytest.warns(DeprecationWarning, match="neighbor_schedule"):
+        top = topology.Topology(
+            "legacy_ring", 4, 1, 2,
+            lambda k: W, neighbor_schedule=lambda k: (0.5, [(1, 0.5)]))
+    r = top.realization(0)
+    assert isinstance(r, topology.Shifts)
+    assert r.shifts == ((1, 0.5),)
+
+
+def test_legacy_neighbor_schedule_property_shim():
+    top = topology.one_peer_exponential(8)
+    with pytest.warns(DeprecationWarning, match="neighbor_schedule"):
+        ns = top.neighbor_schedule
+    assert ns is not None
+    assert ns(1) == (0.5, [(-2, 0.5)])
+    # non-circulant topologies return None (legacy "dense path" sentinel)
+    assert topology.star(8).neighbor_schedule is None
+    assert topology.one_peer_hypercube(8).neighbor_schedule is None

@@ -223,12 +223,19 @@ def test_d_adamw_warmup_combinator(n=8):
 # --- GossipPlan regressions -------------------------------------------------
 
 def test_plan_regimes():
+    """GossipPlan classifies by pattern-matching realization IR types, not
+    by sniffing topology attributes."""
     assert GossipPlan(topology.star(8)).regime == "static"
     assert GossipPlan(topology.grid_2d(8)).regime == "static"
-    assert GossipPlan(topology.one_peer_exponential(8)).regime == "neighbor"
-    assert GossipPlan(topology.static_exponential(8)).regime == "neighbor"
-    assert GossipPlan(topology.bipartite_random_match(8)).regime == "dense"
-    assert GossipPlan(topology.one_peer_hypercube(8)).regime == "dense"
+    assert GossipPlan(topology.one_peer_exponential(8)).regime == "shifts"
+    assert GossipPlan(topology.static_exponential(8)).regime == "shifts"
+    assert GossipPlan(topology.ceca(12)).regime == "shifts"
+    # matchings are first-class now (they used to fall to "dense")
+    assert GossipPlan(topology.bipartite_random_match(8)).regime == "matching"
+    assert GossipPlan(topology.one_peer_hypercube(8)).regime == "matching"
+    assert GossipPlan(topology.base_k(8, 1)).regime == "matching"
+    assert GossipPlan(topology.base_k(9, 2)).regime == "dense"   # 3-cliques
+    assert GossipPlan(topology.base_k(12, 2)).regime == "mixed"  # [3, 2, 2]
 
 
 @pytest.mark.parametrize("topname", ["ring", "star", "static_exp",
@@ -259,15 +266,17 @@ def test_plan_compiles_once_per_realization(n=8):
     assert plan.step_fn(2) is plan.step_fn(2 + top.period)
 
 
-def test_plan_dense_schedule_single_executable_not_frozen(n=8):
-    """random_match: ONE compiled executable, but consecutive steps apply
-    different matchings (the realized W^{(k)} is a traced argument)."""
+def test_plan_matching_schedule_not_frozen(n=8):
+    """random_match: consecutive steps apply different matchings, each one
+    an explicit-pairs permute executable keyed by its pairing (the dense
+    traced-W route used to all-gather O(n) bytes for a degree-1 graph)."""
     top = topology.bipartite_random_match(n, seed=0)
     plan = GossipPlan(top, fn=lambda mix, t: mix(t))
     tree = _tree(n, seed=5)
     out0 = plan.step_fn(0)(tree)
     out1 = plan.step_fn(1)(tree)
-    assert plan.num_compiled == 1
+    assert plan.num_compiled == 2   # one executable per distinct matching
+    assert plan.realization_key(0)[0] == "matching"
     diffs = [float(jnp.abs(a.astype(f32) - b.astype(f32)).max())
              for a, b in zip(jax.tree.leaves(out0), jax.tree.leaves(out1))]
     assert max(diffs) > 0.0
@@ -275,16 +284,41 @@ def test_plan_dense_schedule_single_executable_not_frozen(n=8):
         tree, jnp.asarray(top.weights(0), f32)))
 
 
+def test_plan_dense_schedule_single_executable(n=8):
+    """A time-varying DENSE schedule (legacy weights_fn topologies) still
+    compiles ONE executable with the realized W^{(k)} as a traced arg."""
+    rng = np.random.default_rng(0)
+
+    def wf(k):
+        # random doubly-stochastic-ish symmetric W per step (exactness of
+        # the values is irrelevant; the executable identity is the point)
+        A = rng.random((n, n)) + np.eye(n)
+        A = A + A.T
+        for _ in range(50):
+            A /= A.sum(1, keepdims=True)
+            A = (A + A.T) / 2
+        return A
+
+    with pytest.warns(DeprecationWarning, match="weights_fn"):
+        top = topology.Topology("legacy_dense", n, 1 << 30, n - 1, wf)
+    plan = GossipPlan(top, fn=lambda mix, t: mix(t))
+    tree = _tree(n, seed=5)
+    plan.step_fn(0)(tree)
+    plan.step_fn(1)(tree)
+    assert plan.num_compiled == 1
+    assert plan.realization_key(0) == ("dense",)
+
+
 def test_plan_refuses_compression_on_dense_regimes(n=8):
-    """int8 wire quantization exists only for the shift path; dense-matrix
-    topologies must refuse loudly instead of silently sending f32."""
-    with pytest.raises(ValueError, match="neighbor-schedule"):
-        GossipPlan(topology.bipartite_random_match(n), compression="int8")
-    with pytest.raises(ValueError, match="neighbor-schedule"):
+    """int8 wire quantization exists for the permute paths (shifts AND
+    matchings now); dense-matrix topologies must refuse loudly instead of
+    silently sending f32."""
+    with pytest.raises(ValueError, match="dense matrices"):
         GossipPlan(topology.star(n), compression="int8")
-    opt = optim.dmsgd(topology.bipartite_random_match(n), beta=0.9,
-                      compression="int8")
-    with pytest.raises(ValueError, match="neighbor-schedule"):
+    with pytest.raises(ValueError, match="dense matrices"):
+        GossipPlan(topology.base_k(9, 2), compression="int8")
+    opt = optim.dmsgd(topology.star(n), beta=0.9, compression="int8")
+    with pytest.raises(ValueError, match="dense matrices"):
         opt.update({"x": jnp.zeros((n, 3))},
                    opt.init({"x": jnp.zeros((n, 3))}),
                    {"x": jnp.zeros((n, 3))}, 0, 0.1)
@@ -296,10 +330,61 @@ def test_plan_int8_compression_threaded(n=8):
     plan = GossipPlan.for_optimizer(opt)
     assert plan.compression == "int8"
     tree = _tree(n, seed=6)
-    self_w, shifts = top.neighbor_schedule(0)
+    r = top.realization(0)
     _assert_trees_equal(
         plan.mix(0)(tree),
-        gossip.mix_shifts(tree, self_w, shifts, compression="int8"))
+        gossip.mix_shifts(tree, r.self_w, list(r.shifts),
+                          compression="int8"))
+
+
+def test_plan_int8_compression_on_matchings(n=8):
+    """Matchings now carry the int8 wire format too (payload + per-leaf
+    scales ride the same explicit-pairs permute)."""
+    top = topology.one_peer_hypercube(n)
+    plan = GossipPlan(top, compression="int8")
+    tree = _tree(n, seed=6)
+    exact = GossipPlan(top).mix(0)(tree)
+    quant = plan.mix(0)(tree)
+    for a, b, x in zip(jax.tree.leaves(quant), jax.tree.leaves(exact),
+                       jax.tree.leaves(tree)):
+        step = float(jnp.max(jnp.abs(x.astype(f32)))) / 127.0
+        assert float(jnp.abs(a.astype(f32) - b.astype(f32)).max()) \
+            <= step * 0.51 + 1e-6
+
+
+def test_plan_gossip_every_identity_offsteps(n=8):
+    """gossip(every=3): off-steps realize as Identity (zero wire bytes, ONE
+    shared executable); the schedule advances per communicating step, so
+    Lemma-1 exactness still holds after tau communications."""
+    top = topology.one_peer_exponential(n)
+    opt = optim.chain(
+        transforms.trace_momentum(0.0),
+        transforms.scale_by_lr("m"),
+        transforms.gossip(where=("x_next",), every=3),
+        topology=top, name="local_sgd", beta=0.0)
+    assert opt.gossip_every == 3
+    assert opt.gossip_where == ("x_next",)
+    plan = GossipPlan.for_optimizer(opt, fn=lambda mix, t: mix(t))
+    assert plan.realization_key(1) == ("identity",)
+    assert plan.realization_key(2) == ("identity",)
+    assert plan.realization_key(0)[0] == "shifts"
+    assert plan.realization_key(3) != plan.realization_key(0)  # advanced
+    tree = _tree(n, seed=7)
+    out = plan.step_fn(1)(tree)
+    _assert_trees_equal(out, tree)              # off-step: bitwise no-op
+    for k in (1, 2, 4, 5, 7):
+        plan.step_fn(k)
+    assert plan.num_compiled == 1               # all off-steps share one
+    # tau communicating steps = exact averaging (steps 0, 3, 6; f32 tree --
+    # bf16 storage rounding would mask the exactness)
+    mixed = {k: v for k, v in tree.items() if v.dtype == f32}
+    for k in (0, 3, 6):
+        mixed = plan.mix(k)(mixed)
+    for leaf in jax.tree.leaves(mixed):
+        avg = leaf.astype(f32).mean(axis=0, keepdims=True)
+        np.testing.assert_allclose(leaf.astype(f32),
+                                   jnp.broadcast_to(avg, leaf.shape),
+                                   rtol=1e-5, atol=1e-5)
 
 
 # --- deprecation shim -------------------------------------------------------
