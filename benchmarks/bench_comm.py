@@ -16,13 +16,20 @@ of one fused DmSGD gossip on a realistic MULTI-LEAF pytree (~100 leaves,
 The engine comparison runs over an 8-way node-sharded mesh (the paper's
 regime: gossip cost == collective cost), where the per-leaf path launches
 ~100 collective-permutes per shift and the flat path exactly one per dtype
-group.  When the hosting process has a single device, the comparison is
-re-executed in a subprocess with ``--xla_force_host_platform_device_count=8``
-(XLA locks the device count at first init).
+group.  A second, 2-axis ``node x fsdp`` mode compares the SHARD-NATIVE
+engine (pack/permute/combine inside shard_map; each device moves only its
+local shard) against the global packed path, whose ``reshape(n, -1)``
+forces GSPMD to reshard the payload around every round -- the multi-axis
+regression the shard-native engine exists to fix.  When the hosting
+process has a single device, the comparisons are re-executed in a
+subprocess with ``--xla_force_host_platform_device_count=8`` (XLA locks
+the device count at first init).
 
 ``--quick`` (the CI fast tier) skips the SPMD subprocess and timing loops
-and writes the structural table to ``BENCH_comm.json`` so the perf
-trajectory accumulates as a workflow artifact.
+and writes the structural table -- including the 2-axis per-shard wire
+accounting -- to ``BENCH_comm.json`` so the perf trajectory accumulates as
+a workflow artifact; ``benchmarks.check_comm_regression`` diffs it against
+the committed baseline and fails CI on a >20% wire-bytes regression.
 """
 from __future__ import annotations
 
@@ -85,6 +92,27 @@ def comm_table(n: int = 16, *, time_mix: bool = True) -> list[dict]:
     return rows
 
 
+def two_axis_rows(n: int = 16, fsdp: int = 8) -> list[dict]:
+    """Structural per-shard wire accounting for a 2-axis ``node x fsdp``
+    mesh: the shard-native engine permutes each node's LOCAL shard, so one
+    chip's wire bytes are the per-node payload / fsdp (the global packed
+    path would instead reshard the full payload around every round)."""
+    tree = {"w": jnp.zeros((n, 250_000, 4), jnp.float32)}  # 1M f32 per node
+    layout = flatbuf.layout_of(tree)
+    rows = []
+    for name in ["one_peer_exp", "static_exp", "one_peer_hypercube",
+                 "base_k"]:
+        top = topology.get_topology(name, n)
+        spec = gossip.gossip_spec(top, 0, layout=layout)
+        bytes_iter = spec["bytes_per_node_per_step"] * 2  # x + momentum
+        rows.append(dict(
+            topology=name, n=n, fsdp=fsdp, kind=spec["kind"],
+            collectives_per_step=spec["collectives_per_step"],
+            bytes_per_iter_per_node=bytes_iter,
+            bytes_per_iter_per_shard=bytes_iter // fsdp))
+    return rows
+
+
 def run(n: int = 16) -> None:
     for r in comm_table(n):
         emit(f"comm_{r['topology']}", r["us_per_mix"],
@@ -92,9 +120,11 @@ def run(n: int = 16) -> None:
              f"bytes_per_iter={r['bytes_per_iter']};gap={r['gap']:.4f};"
              f"transient~{r['transient']:.3g}")
 
-    # flat vs per-leaf engine at 8 NODES (8-way sharded mesh)
+    # flat vs per-leaf engine at 8 NODES (8-way sharded mesh) + the 2-axis
+    # shard-native vs global packed comparison
     if jax.device_count() >= 8:
         engine_compare_spmd()
+        engine_compare_two_axis()
     else:
         env = dict(os.environ)
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -119,15 +149,22 @@ def run(n: int = 16) -> None:
 
 def run_quick(out_path: str = "BENCH_comm.json", n: int = 16) -> None:
     """CI fast tier: structural IR accounting only (no SPMD subprocess, no
-    timing loops), dumped as JSON for the workflow-artifact trajectory."""
+    timing loops), dumped as JSON for the workflow-artifact trajectory.
+    Includes the 2-axis ``node x fsdp`` per-shard wire accounting of the
+    shard-native engine."""
     rows = comm_table(n, time_mix=False)
-    rec = {"n": n, "rows": rows}
+    rec = {"n": n, "rows": rows,
+           "two_axis": {"fsdp": 8, "rows": two_axis_rows(n, fsdp=8)}}
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)
     for r in rows:
         emit(f"comm_{r['topology']}", 0.0,
              f"kind={r['kind']};wire_multiplier={r['wire_multiplier']};"
              f"bytes_per_iter={r['bytes_per_iter']}")
+    for r in rec["two_axis"]["rows"]:
+        emit(f"comm_2ax_{r['topology']}", 0.0,
+             f"fsdp={r['fsdp']};"
+             f"bytes_per_iter_per_shard={r['bytes_per_iter_per_shard']}")
     print(f"wrote {out_path}")
 
 
@@ -188,6 +225,50 @@ def engine_compare_spmd(nn: int = 8) -> None:
          f"permutes_per_step={len(layout_m.groups)}")
 
 
+def engine_compare_two_axis(nodes: int = 4, fsdp: int = 2) -> None:
+    """Shard-native vs global packed engine on a (node x fsdp) mesh.
+
+    Leaves are sharded P("node", "fsdp").  The global path's
+    ``reshape(n, -1)`` pack destroys the fsdp sharding, so GSPMD reshards
+    (all-gathers) the whole payload around every gossip round; the
+    shard-native path packs/permutes/combines inside shard_map and each
+    device moves exactly its local shard's bytes.  Emits wall time plus the
+    HLO collective counts/bytes so the reshard is visible, not inferred."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.launch.hlo_cost import analyze_hlo
+
+    if jax.device_count() < nodes * fsdp:
+        raise RuntimeError(
+            f"two-axis comparison needs {nodes * fsdp} devices, got "
+            f"{jax.device_count()}")
+    mesh = Mesh(np.array(jax.devices()[:nodes * fsdp]).reshape(nodes, fsdp),
+                ("node", "fsdp"))
+    mtree = _transformer_like_tree(nodes)
+    n_leaves = len(jax.tree.leaves(mtree))
+    specs = jax.tree.map(lambda _: P("node", "fsdp"), mtree)
+    shard = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    mtree = jax.device_put(mtree, shard)
+
+    top = topology.get_topology("one_peer_exp", nodes)
+    r0 = top.realization(0)
+    mix_native = GossipPlan(top, mesh=mesh, specs=specs).mix(0)
+    native_fn = jax.jit(lambda t: mix_native(t),
+                        in_shardings=(shard,), out_shardings=shard)
+    global_fn = jax.jit(
+        lambda t: gossip.mix_shifts(t, r0.self_w, list(r0.shifts)),
+        in_shardings=(shard,), out_shardings=shard)
+    for tag, fn in (("shardnative", native_fn), ("global", global_fn)):
+        cost = analyze_hlo(fn.lower(mtree).compile().as_text())
+        us = time_fn(fn, mtree, iters=10)
+        emit(f"comm_engine2ax_one_peer_exp_{tag}", us,
+             f"nodes={nodes};fsdp={fsdp};leaves={n_leaves};"
+             f"collectives={dict(cost.collective_counts)};"
+             f"coll_bytes_per_chip={cost.total_collective_bytes:.4g}")
+
+
 def _transformer_like_tree(n: int, n_blocks: int = 24):
     """~1M params split over 4 * n_blocks + 1 leaves (transformer-shaped)."""
     per_block = 1_000_000 // (n_blocks + 1)
@@ -207,6 +288,7 @@ def _transformer_like_tree(n: int, n_blocks: int = 24):
 if __name__ == "__main__":
     if "--engine-spmd" in sys.argv:
         engine_compare_spmd()
+        engine_compare_two_axis()
     elif "--quick" in sys.argv:
         out = "BENCH_comm.json"
         if "--out" in sys.argv:

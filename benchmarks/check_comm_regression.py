@@ -1,0 +1,81 @@
+"""CI perf gate: diff a fresh ``BENCH_comm.json`` against the committed
+baseline and fail on a wire-bytes regression.
+
+The structural table (``bench_comm --quick``) is deterministic -- bytes per
+iteration per topology read straight off the realization IR and the packed
+layout -- so ANY growth is a real change to what the engine puts on the
+wire (a packing regression, an IR lowering falling back to dense, a lost
+shard-native path).  The gate fails when any topology's ``bytes_per_iter``
+(or 2-axis ``bytes_per_iter_per_shard``) exceeds the baseline by more than
+``--threshold`` (default 20%); improvements and new topologies pass with a
+note, so the baseline can be refreshed by committing the new artifact.
+
+Usage (CI):
+  python -m benchmarks.bench_comm --quick --out BENCH_comm.new.json
+  python -m benchmarks.check_comm_regression \\
+      --baseline BENCH_comm.json --new BENCH_comm.new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _index(rows: list[dict], key: str = "topology") -> dict:
+    return {r[key]: r for r in rows}
+
+
+def compare(baseline: dict, new: dict, threshold: float = 0.2) -> list[str]:
+    """Returns a list of human-readable regression messages (empty = pass)."""
+    fails: list[str] = []
+
+    def check(tag: str, old_rows: list, new_rows: list, field: str):
+        old = _index(old_rows)
+        for name, row in _index(new_rows).items():
+            base = old.get(name)
+            if base is None or field not in base:
+                print(f"  {tag}/{name}: new row (no baseline), skipping")
+                continue
+            b, n = base[field], row[field]
+            if b > 0 and n > b * (1.0 + threshold):
+                fails.append(
+                    f"{tag}/{name}: {field} {b} -> {n} "
+                    f"(+{100.0 * (n - b) / b:.1f}% > {100 * threshold:.0f}%)")
+            elif n < b:
+                print(f"  {tag}/{name}: {field} improved {b} -> {n}")
+
+    check("comm", baseline.get("rows", []), new.get("rows", []),
+          "bytes_per_iter")
+    check("two_axis",
+          baseline.get("two_axis", {}).get("rows", []),
+          new.get("two_axis", {}).get("rows", []),
+          "bytes_per_iter_per_shard")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_comm.json")
+    ap.add_argument("--new", default="BENCH_comm.new.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed fractional wire-bytes growth")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    fails = compare(baseline, new, args.threshold)
+    if fails:
+        print("WIRE-BYTES REGRESSION:")
+        for msg in fails:
+            print(f"  {msg}")
+        sys.exit(1)
+    print("comm wire bytes OK (no regression above "
+          f"{100 * args.threshold:.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

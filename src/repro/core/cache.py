@@ -1,0 +1,45 @@
+"""Keyed build-once caches shared across the core/launch layers.
+
+:class:`CompileCache` started life as :class:`repro.core.plan.GossipPlan`'s
+executable cache and is re-exported from :mod:`repro.core.plan` for
+backwards compatibility; it lives here so leaf modules that ``plan``
+itself imports (e.g. :mod:`repro.core.flatbuf`'s layout cache) can use the
+same LRU without an import cycle.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable
+
+__all__ = ["CompileCache"]
+
+
+class CompileCache:
+    """Keyed build-once cache (typically: hashable key -> jitted fn).
+
+    ``max_entries`` bounds the cache with least-recently-used eviction --
+    an aperiodic Matching stream (random_match) visits a fresh pairing
+    every step, and a long multi-model process visits a fresh flat-buffer
+    layout per tree structure, so without a bound the dict would grow for
+    the whole process lifetime.  Periodic schedules / steady-state servers
+    never evict (their working set is tiny).
+    """
+
+    def __init__(self, max_entries: int | None = None):
+        self._cache: "OrderedDict" = OrderedDict()
+        self.max_entries = max_entries
+
+    def get(self, key, build: Callable[[], Any]):
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        val = self._cache[key] = build()
+        if self.max_entries is not None and len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+        return val
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def __contains__(self, key) -> bool:
+        return key in self._cache

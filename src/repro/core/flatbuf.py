@@ -8,14 +8,25 @@ communication claim in launch overhead.  This module packs all leaves of a
 common dtype into ONE contiguous ``(n, B)`` buffer so the production path in
 :mod:`repro.core.gossip` rolls each dtype group exactly once per shift,
 regardless of leaf count, and feeds the fused ``gossip_mix`` Pallas kernel
-directly (the buffer is padded to the kernel's (8, 1024) f32 tile grid, so
-the kernel never re-pads).
+directly.
+
+The pack runs at TWO granularities:
+
+* **global** (``pad_multiple=PAD_MULTIPLE``, the default): every node's full
+  leaf row is flattened into the group buffer, padded so the flattened
+  ``(n * B)`` buffer tiles the kernel's (8, 1024) f32 grid.  This is the
+  single-process / no-mesh path.
+* **per-shard** (``pad_multiple=1``): used *inside* ``shard_map`` by the
+  shard-native engine -- each device packs only its local block of every
+  leaf (e.g. ``(1, B_shard)`` on a ``node x fsdp`` mesh), so packing never
+  moves bytes across devices and inner-dim shardings are untouched.  Tile
+  padding happens per shard inside ``ops.gossip_mix`` instead of globally.
 
 The layout (group membership, per-leaf offsets/shapes, padding, segment ids
-for per-leaf quantization scales) depends only on the tree *structure*, so it
-is computed once per structure and cached process-wide; ``pack``/``unpack``
-inside a jit trace are pure reshape/concat/slice -- XLA fuses them into the
-surrounding computation.
+for per-leaf quantization scales) depends only on the tree *structure* (and
+the pad granularity), so it is computed once per structure and kept in an
+LRU-bounded process cache; ``pack``/``unpack`` inside a jit trace are pure
+reshape/concat/slice -- XLA fuses them into the surrounding computation.
 """
 from __future__ import annotations
 
@@ -28,10 +39,13 @@ import numpy as np
 
 from repro.kernels.gossip_mix import kernel as _gm_kernel
 
+from .cache import CompileCache
+
 PyTree = Any
 
 __all__ = ["FlatLayout", "GroupLayout", "LeafSlot", "layout_of", "pack",
-           "unpack", "wire_bytes_per_round", "PAD_MULTIPLE"]
+           "unpack", "wire_bytes_per_round", "wire_bytes_split",
+           "PAD_MULTIPLE"]
 
 # Pad each group's flat width to this multiple: with TILE_COLS lanes the
 # flattened (n * B) buffer then reshapes to a whole number of TILE_ROWS-row
@@ -76,23 +90,29 @@ class FlatLayout:
         raise KeyError(f"no group with dtype {dtype}")
 
 
-_LAYOUT_CACHE: dict = {}
+# LRU-bounded: one entry per (tree structure, shapes, pad granularity).  A
+# long-lived multi-model process (serve + train + benchmarks) visits a fresh
+# structure per model; an unbounded dict would leak layouts (plus their
+# seg_ids arrays) for the whole process lifetime.
+_LAYOUT_CACHE = CompileCache(max_entries=256)
 
 
-def _pad_up(size: int) -> int:
-    return max(-(-size // PAD_MULTIPLE) * PAD_MULTIPLE, PAD_MULTIPLE)
+def _pad_up(size: int, multiple: int) -> int:
+    return max(-(-size // multiple) * multiple, multiple)
 
 
-def layout_of(tree: PyTree) -> FlatLayout:
-    """Compute (or fetch) the packing layout for ``tree``'s structure."""
+def layout_of(tree: PyTree, pad_multiple: int = PAD_MULTIPLE) -> FlatLayout:
+    """Compute (or fetch) the packing layout for ``tree``'s structure.
+
+    ``pad_multiple=1`` (the shard-native per-shard pack) allocates exactly
+    the used columns; the default pads each group's width to the Pallas
+    tile grid so the single-process kernel path never re-pads."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         raise ValueError("cannot pack an empty pytree")
     key = (treedef,
-           tuple((jnp.dtype(x.dtype).name, tuple(x.shape)) for x in leaves))
-    hit = _LAYOUT_CACHE.get(key)
-    if hit is not None:
-        return hit
+           tuple((jnp.dtype(x.dtype).name, tuple(x.shape)) for x in leaves),
+           int(pad_multiple))
 
     n = leaves[0].shape[0] if leaves[0].ndim else None
     for leaf in leaves:
@@ -101,26 +121,27 @@ def layout_of(tree: PyTree) -> FlatLayout:
                 "every gossip leaf needs the same leading node axis; got "
                 f"shapes {[tuple(x.shape) for x in leaves]}")
 
-    by_dtype: dict = {}
-    for i, leaf in enumerate(leaves):
-        by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+    def build() -> FlatLayout:
+        by_dtype: dict = {}
+        for i, leaf in enumerate(leaves):
+            by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
 
-    groups = []
-    for dt, idxs in by_dtype.items():
-        slots, off = [], 0
-        for i in idxs:
-            size = int(np.prod(leaves[i].shape[1:], dtype=np.int64))
-            slots.append(LeafSlot(i, off, size, tuple(leaves[i].shape)))
-            off += size
-        padded = _pad_up(off)
-        seg = np.full((padded,), len(slots), np.int32)
-        for pos, s in enumerate(slots):
-            seg[s.offset:s.offset + s.size] = pos
-        groups.append(GroupLayout(dt, tuple(slots), off, padded, seg))
+        groups = []
+        for dt, idxs in by_dtype.items():
+            slots, off = [], 0
+            for i in idxs:
+                size = int(np.prod(leaves[i].shape[1:], dtype=np.int64))
+                slots.append(LeafSlot(i, off, size, tuple(leaves[i].shape)))
+                off += size
+            padded = _pad_up(off, pad_multiple)
+            seg = np.full((padded,), len(slots), np.int32)
+            for pos, s in enumerate(slots):
+                seg[s.offset:s.offset + s.size] = pos
+            groups.append(GroupLayout(dt, tuple(slots), off, padded, seg))
 
-    layout = FlatLayout(treedef, int(n), tuple(groups), len(leaves))
-    _LAYOUT_CACHE[key] = layout
-    return layout
+        return FlatLayout(treedef, int(n), tuple(groups), len(leaves))
+
+    return _LAYOUT_CACHE.get(key, build)
 
 
 def pack(tree: PyTree, layout: FlatLayout | None = None):
@@ -149,14 +170,26 @@ def unpack(layout: FlatLayout, bufs) -> PyTree:
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
-def wire_bytes_per_round(layout: FlatLayout,
-                         compression: str | None = None) -> int:
-    """Bytes one node sends per gossip round (one shift, all dtype groups)."""
-    total = 0
+def wire_bytes_split(layout: FlatLayout,
+                     compression: str | None = None) -> dict:
+    """Per-round wire bytes one node sends, split by collective.
+
+    Returns ``{"payload": ..., "scales": ...}``: the main payload buffers
+    (all dtype groups) and -- under int8 compression -- the per-leaf-segment
+    f32 scale rows that ride a SECOND, tiny collective-permute per dtype
+    group (``scales == 0`` uncompressed)."""
+    payload = scales = 0
     for g in layout.groups:
         if compression == "int8":
-            # int8 payload + one f32 scale per leaf segment (incl. padding)
-            total += g.padded + 4 * (len(g.slots) + 1)
+            payload += g.padded                       # 1 byte / element
+            scales += 4 * (len(g.slots) + 1)          # f32 per leaf + pad seg
         else:
-            total += g.padded * jnp.dtype(g.dtype).itemsize
-    return total
+            payload += g.padded * jnp.dtype(g.dtype).itemsize
+    return {"payload": payload, "scales": scales}
+
+
+def wire_bytes_per_round(layout: FlatLayout,
+                         compression: str | None = None) -> int:
+    """Total bytes one node sends per gossip round (payload + scales)."""
+    split = wire_bytes_split(layout, compression)
+    return split["payload"] + split["scales"]

@@ -1,4 +1,4 @@
-"""Partial averaging (gossip) over the node axis — flat-buffer fused engine.
+"""Partial averaging (gossip) over the node axis — shard-native fused engine.
 
 State layout: every decentralized quantity (params, momentum, grads) is a
 pytree whose leaves carry a **leading node axis** of size ``n``.  On the
@@ -11,37 +11,49 @@ buffer per dtype (:mod:`repro.core.flatbuf`), so the collective cost is
 independent of the leaf count.  One lowering per realization-IR node
 (:mod:`repro.core.topology`):
 
-* ``Shifts``   -> :func:`mix_shifts`: a weighted sum of **rolls** of the
-  node axis.  ``jnp.roll`` with a static shift on a sharded axis lowers to
-  ``collective-permute`` -- one roll per shift **per dtype group** (NOT per
-  leaf): one-peer exponential = ONE collective-permute per iteration (the
-  paper's Omega(1) claim), static exponential = ceil(log2 n) permutes.
+* ``Shifts``   -> :func:`mix_shifts`: a weighted sum of circulant node-axis
+  permutes -- one ``collective-permute`` per shift **per dtype group** (NOT
+  per leaf): one-peer exponential = ONE collective-permute per iteration
+  (the paper's Omega(1) claim), static exponential = ceil(log2 n) permutes.
 * ``Matching`` -> :func:`mix_matching`: an arbitrary pairing is ONE
-  explicit-pairs ``lax.ppermute`` (via ``shard_map`` over the node mesh
-  axis) per dtype group -- random matchings and the one-peer hypercube no
-  longer fall to the dense all-gather route.  Without a node mesh the same
-  math runs as a local static gather.
+  explicit-pairs ``collective-permute`` per dtype group -- random matchings
+  and the one-peer hypercube never fall to the dense all-gather route.
 * ``Dense``    -> :func:`mix_dense`: one ``einsum('ij,jb->ib')`` per dtype
   group.  Exact for *any* doubly-stochastic ``W`` but lowers to an
   all-gather over the node axis: O(n) bytes per node.
 * ``Identity`` -> no-op (skipped round, ``gossip(every=k)`` off-steps).
 
-The weighted combine ``w_self*x + sum_d w_d*recv_d`` runs through the fused
-``gossip_mix`` Pallas kernel on single-chip TPU and the algebraically
-identical ``ref`` path elsewhere, for shift and matching rounds alike.
+**Shard-native path** (pass ``mesh=`` whose node axis matches ``n``, plus
+optional per-leaf ``specs=``): packing, the permutes, the int8 quantizer and
+the weighted combine all run *inside* ``shard_map`` over the FULL mesh.
+Each device packs only its local block of every leaf (``flatbuf`` with
+``pad_multiple=1``), ``lax.ppermute`` over the node axis moves exactly the
+local shard's bytes, and inner-dim (fsdp/model) shardings are never
+disturbed -- no GSPMD reshard or all-gather of the payload appears anywhere
+in the train step.  The fused ``gossip_mix`` Pallas kernel runs per device
+shard on TPU meshes of ANY size (the old single-chip gate is gone); the
+algebraically identical ``ref`` path serves other backends, and
+:func:`set_pallas_mode` can force the kernel (interpret mode) or the ref
+path for parity tests.  Without a mesh the historical global path packs the
+full ``(n, B)`` buffer and relies on GSPMD to lower rolls to permutes --
+correct everywhere, but on a multi-axis mesh it reshards the payload; the
+shard-native path is the production route.
 
 All paths preserve the global mean exactly (double stochasticity), which
 the property tests assert; the flat path is bit-identical to the historical
-per-leaf path (kept as ``mix_shifts_per_leaf`` for tests/benchmarks), and
-the matching path is bit-identical to ``mix_dense`` of the realized W.
+per-leaf path (kept as ``mix_shifts_per_leaf`` for tests/benchmarks), the
+shard-native path is bit-identical to the global path, and the matching
+path is bit-identical to ``mix_dense`` of the realized W.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import flatbuf
 from .topology import (
@@ -57,26 +69,48 @@ PyTree = Any
 
 __all__ = ["mix_dense", "mix_shifts", "mix_matching", "mix_realization",
            "mix", "mix_switch", "gossip_spec", "mix_shifts_per_leaf",
-           "AperiodicScheduleError"]
+           "set_pallas_mode", "AperiodicScheduleError"]
 
 
-def _use_pallas() -> bool:
-    # Single-chip TPU only: pallas_call has no GSPMD partitioning rule, so
-    # under a multi-device jit XLA would replicate the node-sharded buffer
-    # around the custom call (O(n*B) gathers) -- the opposite of the fused
-    # engine's point.  Sharded meshes take the ref combine (pure jnp; XLA
-    # fuses it into one elementwise pass and the rolls still lower to one
-    # collective-permute each).  Multi-chip kernel use needs a shard_map
-    # wrapper -- ROADMAP open item.
-    return jax.default_backend() == "tpu" and jax.device_count() == 1
+# "auto": fused Pallas combine on TPU (per-shard inside shard_map on any
+# mesh size; whole-buffer on a single chip), jnp ref elsewhere.
+# "interpret": force the kernel in interpret mode (CPU parity tests).
+# "off": force the ref combine everywhere.
+_PALLAS_MODE = os.environ.get("REPRO_GOSSIP_PALLAS", "auto")
 
 
-def _combine(x, recvs, w_self: float, ws: tuple):
-    """out = w_self*x + sum_d ws[d]*recvs[d] over (n, B) packed buffers."""
-    if _use_pallas():
+def set_pallas_mode(mode: str) -> None:
+    """Select the combine backend: ``"auto"`` | ``"interpret"`` | ``"off"``."""
+    global _PALLAS_MODE
+    if mode not in ("auto", "interpret", "off"):
+        raise ValueError(f"unknown pallas mode {mode!r}")
+    _PALLAS_MODE = mode
+
+
+def _use_pallas(local: bool) -> bool:
+    # ``local=True`` means we are inside shard_map operating on one device's
+    # shard: pallas_call is then a plain per-device custom call and needs no
+    # GSPMD partitioning rule, so the kernel is safe on ANY mesh size.  The
+    # only remaining auto-gate is the global (no-mesh) path on multi-device
+    # jit, where XLA would replicate the node-sharded buffer around the
+    # custom call.
+    if _PALLAS_MODE == "off":
+        return False
+    if _PALLAS_MODE == "interpret":
+        return True
+    if jax.default_backend() != "tpu":
+        return False
+    return local or jax.device_count() == 1
+
+
+def _combine(x, recvs, w_self: float, ws: tuple, local: bool = False):
+    """out = w_self*x + sum_d ws[d]*recvs[d] over packed buffers."""
+    if _use_pallas(local):
         from repro.kernels.gossip_mix import ops as gm_ops
+        interpret = True if _PALLAS_MODE == "interpret" else None
         return gm_ops.gossip_mix(x, recvs, w_self=float(w_self),
-                                 ws=tuple(float(w) for w in ws))
+                                 ws=tuple(float(w) for w in ws),
+                                 interpret=interpret)
     from repro.kernels.gossip_mix import ref as gm_ref
     return gm_ref.gossip_mix_ref(x, recvs, float(w_self), ws)
 
@@ -92,45 +126,159 @@ def mix_dense(tree: PyTree, W: jax.Array) -> PyTree:
     return flatbuf.unpack(layout, out)
 
 
-def _leaf_scales(tree: PyTree, layout: flatbuf.FlatLayout):
+def _scale_columns(leaves, layout: flatbuf.FlatLayout, inner_axes: tuple = ()):
     """Per-(node, leaf) int8 scales, grouped to match the packed buffers.
 
     Returns one (n, L_g + 1) f32 matrix per group; the trailing column is
     the padding segment's scale (1.0, so padded zeros quantize to zero).
     Matches the historical per-leaf path bit-for-bit: scale_l = max|x_l| /
-    127 along each node's slice."""
-    leaves = jax.tree.leaves(tree)
+    127 along each node's slice.  Inside shard_map (``inner_axes`` = the
+    mesh axes the inner dims are sharded over) each device reduces its
+    local block and a ``pmax`` over the inner axes completes the exact
+    per-leaf max -- one scalar per leaf on the wire, nothing else."""
     outs = []
     for g in layout.groups:
         cols = []
         for s in g.slots:
             x32 = leaves[s.leaf_index].astype(jnp.float32).reshape(
                 layout.n, -1)
-            cols.append(jnp.max(jnp.abs(x32), axis=1) / 127.0 + 1e-30)
+            m = jnp.max(jnp.abs(x32), axis=1)
+            if inner_axes:
+                m = jax.lax.pmax(m, inner_axes)
+            cols.append(m / 127.0 + 1e-30)
         cols.append(jnp.ones((layout.n,), jnp.float32))
         outs.append(jnp.stack(cols, axis=1))
     return outs
 
 
+def _leaf_scales(tree: PyTree, layout: flatbuf.FlatLayout):
+    return _scale_columns(jax.tree.leaves(tree), layout)
+
+
+# ---------------------------------------------------------------------------
+# Shard-native engine
+# ---------------------------------------------------------------------------
+
+def _node_count(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return int(leaves[0].shape[0]) if leaves and leaves[0].ndim else 0
+
+
+def _shard_native(mesh, axis_name: str, n: int) -> bool:
+    return mesh is not None and dict(mesh.shape).get(axis_name) == n
+
+
+def _resolve_specs(tree: PyTree, specs, axis_name: str):
+    """Per-leaf PartitionSpecs for the shard_map boundary.
+
+    ``specs`` may be a pytree of PartitionSpec matching ``tree``, a callable
+    ``tree -> spec pytree`` (e.g. ``launch.sharding.gossip_payload_spec_fn``
+    reapplying the parameter placement rules), or None -- node-sharded
+    leading axis, replicated inner dims (the 1-axis-mesh default)."""
+    from jax.sharding import PartitionSpec as P
+    if specs is None:
+        return jax.tree.map(
+            lambda x: P(axis_name, *([None] * (x.ndim - 1))), tree)
+    if callable(specs):
+        return specs(tree)
+    return specs
+
+
+def _mix_sharded(tree: PyTree, *, mesh, specs, axis_name: str, rounds: list,
+                 self_w: float, compression: str | None,
+                 fixed=None) -> PyTree:
+    """One gossip round entirely inside ``shard_map`` over the full mesh.
+
+    ``rounds`` is ``[(ppermute send pairs, weight), ...]``; each device
+    packs its LOCAL block of every leaf (``pad_multiple=1`` -- per-shard
+    tile padding happens inside ``ops.gossip_mix``), permutes only those
+    bytes over the node axis, combines, and unpacks to the same local
+    shapes -- so the payload is never resharded and inner-dim shardings
+    pass through untouched.  ``fixed`` is an optional (n,) bool mask of
+    matching fixed points whose nodes must keep their value bit-exactly."""
+    from jax.experimental.shard_map import shard_map
+
+    spec_tree = _resolve_specs(tree, specs, axis_name)
+    inner_axes = tuple(a for a in mesh.axis_names if a != axis_name)
+    fixed_arr = None if fixed is None else jnp.asarray(fixed)
+    ws = tuple(w for _, w in rounds)
+
+    def local_fn(t):
+        layout = flatbuf.layout_of(t, pad_multiple=1)
+        layout, bufs = flatbuf.pack(t, layout)
+        keep = (None if fixed_arr is None
+                else fixed_arr[jax.lax.axis_index(axis_name)])
+        out = []
+        if compression == "int8":
+            scales = _scale_columns(jax.tree.leaves(t), layout, inner_axes)
+            for g, buf, sc in zip(layout.groups, bufs, scales):
+                seg = jnp.asarray(g.seg_ids)
+                x32 = buf.astype(jnp.float32)
+                q = jnp.round(x32 / sc[:, seg]).astype(jnp.int8)
+                acc = (self_w * x32) if self_w else None
+                for pairs, w in rounds:
+                    rq = jax.lax.ppermute(q, axis_name, perm=pairs)
+                    rs = jax.lax.ppermute(sc, axis_name, perm=pairs)
+                    r = w * (rq.astype(jnp.float32) * rs[:, seg])
+                    acc = r if acc is None else acc + r
+                if keep is not None:
+                    # fixed points keep their FULL-PRECISION buffer (never
+                    # the quantized image, and never the w_self*x +
+                    # w_peer*x blend, which is only exact for w_self=0.5)
+                    acc = jnp.where(keep, x32, acc)
+                out.append(acc.astype(buf.dtype))
+        else:
+            for buf in bufs:
+                recvs = [jax.lax.ppermute(buf, axis_name, perm=pairs)
+                         for pairs, _ in rounds]
+                o = _combine(buf, recvs, self_w, ws, local=True)
+                if keep is not None:
+                    o = jnp.where(keep, buf, o)
+                out.append(o)
+        return flatbuf.unpack(layout, out)
+
+    return shard_map(local_fn, mesh=mesh, in_specs=(spec_tree,),
+                     out_specs=spec_tree, check_rep=False)(tree)
+
+
+def _shift_pairs(n: int, shift: int) -> list:
+    """Send pairs for a circulant +shift: node i sends to (i + s) mod n,
+    i.e. receives from (i - s) mod n == jnp.roll(x, s, axis=0) semantics."""
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
 def mix_shifts(tree: PyTree, self_weight: float,
                shifts: list[tuple[int, float]],
-               compression: str | None = None) -> PyTree:
+               compression: str | None = None, *, mesh=None,
+               axis_name: str = "node", specs=None) -> PyTree:
     """x_i <- self_weight * x_i + sum_d w_d * x_{(i - s_d) mod n}.
 
     Each (s_d, w_d) descriptor means node i *sends* its buffer to node
-    (i + s_d) mod n; jnp.roll(x, s, axis=0)[i] == x[(i - s) mod n].
+    (i + s_d) mod n.
 
-    Fused flat path: ONE roll per shift per dtype group, then one fused
-    weighted combine over the packed buffer.
+    With a ``mesh`` whose ``axis_name`` axis has one node per device block,
+    the whole round runs shard-natively (see :func:`_mix_sharded`): ONE
+    explicit-pairs ``lax.ppermute`` per shift per dtype group moving only
+    each device's local shard bytes.  Without a mesh, the global path packs
+    the full ``(n, B)`` buffer and rolls it (GSPMD lowers each static roll
+    on a node-sharded axis to one collective-permute).
 
     compression='int8': QSGD-style quantized payload (beyond-paper, cf. the
     paper's related work [2, 24, 26]): the SENT buffer is symmetric-int8
     quantized with a per-(node, leaf-segment) scale (identical to the
-    historical per-leaf quantizer), so the collective-permute moves
-    1 byte/element plus one f32 scale per leaf instead of 4 bytes/element;
-    the local term stays full precision.  Biased (~0.4% of per-leaf max);
-    exact-averaging of Lemma 1 becomes approximate -- measured in tests.
+    historical per-leaf quantizer), so each shift moves 1 byte/element plus
+    one f32 scale per leaf (the scale row rides a second, tiny permute per
+    dtype group); the local term stays full precision.  Biased (~0.4% of
+    per-leaf max); exact-averaging of Lemma 1 becomes approximate --
+    measured in tests.
     """
+    n = _node_count(tree)
+    if _shard_native(mesh, axis_name, n):
+        rounds = [(_shift_pairs(n, s), w) for s, w in shifts]
+        return _mix_sharded(tree, mesh=mesh, specs=specs,
+                            axis_name=axis_name, rounds=rounds,
+                            self_w=self_weight, compression=compression)
+
     layout, bufs = flatbuf.pack(tree)
     ws = tuple(w for _, w in shifts)
 
@@ -157,49 +305,37 @@ def mix_shifts(tree: PyTree, self_weight: float,
     return flatbuf.unpack(layout, out)
 
 
-def _permute_rows(buf, partner: tuple, mesh, axis_name: str):
-    """recv[i] = buf[partner[i]] along the leading node axis.
-
-    With a mesh whose ``axis_name`` axis has exactly one node per device
-    block, this is ONE explicit-pairs ``lax.ppermute`` (via shard_map) --
-    arbitrary pairings cost the same one collective-permute as a uniform
-    roll.  Without such a mesh (single process, or nodes packed several per
-    device) it falls back to a local static gather (which GSPMD would turn
-    into an all-gather -- correct, just not the one-permute wire path)."""
-    n = len(partner)
-    if mesh is not None and mesh.shape.get(axis_name) == n:
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-
-        pairs = [(src, dst) for dst, src in enumerate(partner)]
-        spec = P(axis_name, *([None] * (buf.ndim - 1)))
-
-        def recv(x):
-            return jax.lax.ppermute(x, axis_name, perm=pairs)
-
-        return shard_map(recv, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                         check_rep=False)(buf)
-    return jnp.take(buf, jnp.asarray(partner), axis=0)
-
-
 def mix_matching(tree: PyTree, partner: tuple, w_self: float = 0.5,
                  compression: str | None = None, mesh=None,
-                 axis_name: str = "node") -> PyTree:
+                 axis_name: str = "node", specs=None) -> PyTree:
     """Pairwise gossip: x_i <- w_self * x_i + (1 - w_self) * x_{partner[i]}.
 
-    ``partner`` is an involution; fixed points keep their value exactly
-    (w_self*x + (1-w_self)*x == x).  One explicit-pairs collective-permute
-    per dtype group when ``mesh`` carries the node axis; the fused
-    ``gossip_mix`` combine is reused for the weighted merge.
+    ``partner`` is an involution; fixed points keep their value EXACTLY
+    (bit-for-bit, enforced with a mask -- under int8 compression their
+    blend reads the full-precision local buffer, never its quantized
+    image).  One explicit-pairs collective-permute per dtype group: the
+    shard-native path when ``mesh`` carries the node axis (see
+    :func:`_mix_sharded`), a local static gather without one.
 
     compression='int8' quantizes the permuted payload exactly like
     :func:`mix_shifts` (per-leaf-segment scales ride along as a second,
-    tiny permute).  Fixed points see quantization error under int8 (their
-    "received" value is their own quantized buffer); perfect matchings --
-    every family shipped here -- have none.
+    tiny permute).
     """
-    layout, bufs = flatbuf.pack(tree)
+    n = len(partner)
+    fixed = np.fromiter((j == i for i, j in enumerate(partner)),
+                        dtype=bool, count=n)
+    fixed_mask = fixed if fixed.any() else None
     w_peer = 1.0 - w_self
+
+    if _shard_native(mesh, axis_name, n):
+        pairs = [(src, dst) for dst, src in enumerate(partner)]
+        return _mix_sharded(tree, mesh=mesh, specs=specs,
+                            axis_name=axis_name, rounds=[(pairs, w_peer)],
+                            self_w=w_self, compression=compression,
+                            fixed=fixed_mask)
+
+    layout, bufs = flatbuf.pack(tree)
+    idx = jnp.asarray(partner)
 
     if compression == "int8":
         scales = _leaf_scales(tree, layout)
@@ -208,16 +344,24 @@ def mix_matching(tree: PyTree, partner: tuple, w_self: float = 0.5,
             seg = jnp.asarray(g.seg_ids)
             x32 = buf.astype(jnp.float32)
             q = jnp.round(x32 / sc[:, seg]).astype(jnp.int8)
-            rq = _permute_rows(q, partner, mesh, axis_name)
-            rs = _permute_rows(sc, partner, mesh, axis_name)
-            acc = w_self * x32 + w_peer * (rq.astype(jnp.float32) * rs[:, seg])
+            rq = jnp.take(q, idx, axis=0)
+            rs = jnp.take(sc, idx, axis=0)
+            acc = w_self * x32 + w_peer * (rq.astype(jnp.float32)
+                                           * rs[:, seg])
+            if fixed_mask is not None:
+                # fixed points keep their full-precision buffer bit-exactly
+                # (for ANY w_self, not just 0.5)
+                acc = jnp.where(jnp.asarray(fixed_mask)[:, None], x32, acc)
             out.append(acc.astype(buf.dtype))
         return flatbuf.unpack(layout, out)
 
     out = []
     for buf in bufs:
-        recv = _permute_rows(buf, partner, mesh, axis_name)
-        out.append(_combine(buf, [recv], w_self, (w_peer,)))
+        recv = jnp.take(buf, idx, axis=0)
+        o = _combine(buf, [recv], w_self, (w_peer,))
+        if fixed_mask is not None:
+            o = jnp.where(jnp.asarray(fixed_mask)[:, None], buf, o)
+        out.append(o)
     return flatbuf.unpack(layout, out)
 
 
@@ -253,16 +397,17 @@ def mix_shifts_per_leaf(tree: PyTree, self_weight: float,
 
 def mix_realization(tree: PyTree, realization, *,
                     compression: str | None = None, mesh=None,
-                    axis_name: str = "node") -> PyTree:
+                    axis_name: str = "node", specs=None) -> PyTree:
     """Lower one realization-IR node onto its wire path."""
     if isinstance(realization, Identity):
         return tree
     if isinstance(realization, Shifts):
         return mix_shifts(tree, realization.self_w, list(realization.shifts),
-                          compression)
+                          compression, mesh=mesh, axis_name=axis_name,
+                          specs=specs)
     if isinstance(realization, Matching):
         return mix_matching(tree, realization.partner, realization.w_self,
-                            compression, mesh, axis_name)
+                            compression, mesh, axis_name, specs)
     if isinstance(realization, Dense):
         if compression is not None:
             raise ValueError(
@@ -273,19 +418,19 @@ def mix_realization(tree: PyTree, realization, *,
 
 
 def mix(tree: PyTree, topology: Topology, step: int,
-        compression: str | None = None, mesh=None) -> PyTree:
+        compression: str | None = None, mesh=None, specs=None) -> PyTree:
     """Apply W^(step) of ``topology`` to ``tree``; ``step`` must be a Python
     int (static).  Dispatches on the realization IR node type."""
     return mix_realization(tree, topology.realization(step),
-                           compression=compression, mesh=mesh)
+                           compression=compression, mesh=mesh, specs=specs)
 
 
 def mix_switch(tree: PyTree, topology: Topology, step: jax.Array,
-               mesh=None) -> PyTree:
+               mesh=None, specs=None) -> PyTree:
     """Traced-step variant: lax.switch over the topology's period so one
     compiled function serves the whole schedule (each branch keeps its own
-    static-shift / static-pairs collective-permute; pass ``mesh`` so
-    Matching branches take the one-permute path instead of the gather
+    static-shift / static-pairs collective-permute; pass ``mesh`` so every
+    branch takes the shard-native one-permute path instead of the gather
     fallback).
 
     Only valid for periodic schedules (``Static``/``Cyclic``): aperiodic
@@ -294,8 +439,7 @@ def mix_switch(tree: PyTree, topology: Topology, step: jax.Array,
     enumerate; silently folding them mod a cap would freeze the schedule to
     its first few realizations (the bug this guard replaces).  NB the
     executable carries one branch per period step -- a schedule's period is
-    naturally O(log n) for every family here, but a legacy-shimmed
-    Cyclic(P) with huge P buys a P-branch switch."""
+    naturally O(log n) for every family here."""
     if not topology.schedule.is_periodic:
         raise AperiodicScheduleError(
             f"mix_switch needs a periodic schedule, but {topology.name!r} "
@@ -303,14 +447,15 @@ def mix_switch(tree: PyTree, topology: Topology, step: jax.Array,
             "the static-step path (GossipPlan compiles one executable per "
             "realization)")
     period = topology.schedule.period
-    branches = [partial(_mix_static, topology=topology, k=k, mesh=mesh)
+    branches = [partial(_mix_static, topology=topology, k=k, mesh=mesh,
+                        specs=specs)
                 for k in range(period)]
     return jax.lax.switch(step % period, branches, tree)
 
 
 def _mix_static(tree: PyTree, *, topology: Topology, k: int,
-                mesh=None) -> PyTree:
-    return mix(tree, topology, k, mesh=mesh)
+                mesh=None, specs=None) -> PyTree:
+    return mix(tree, topology, k, mesh=mesh, specs=specs)
 
 
 def gossip_spec(topology: Topology, step: int,
@@ -324,30 +469,39 @@ def gossip_spec(topology: Topology, step: int,
     ``n - 1`` for ``Dense`` (the packed buffer is all-gathered -- O(n)
     bytes per node REGARDLESS of the realization's fan-in), 0 for
     ``Identity``.  With a ``layout`` (from :func:`flatbuf.layout_of`), adds
-    the packed-path byte accounting: collectives per step and bytes sent
-    per node."""
+    the packed-path byte accounting: collectives per step (int8 rounds move
+    TWO permutes per dtype group -- payload plus the per-leaf scale row)
+    and bytes sent per node, split payload vs. scales so dry-run rooflines
+    match the HLO."""
     r = topology.realization(step)
     n = topology.n
     mult = r.wire_multiplier(n)
     if isinstance(r, Shifts):
         spec = {"kind": "ppermute", "rounds": len(r.shifts),
                 "shifts": [s for s, _ in r.shifts]}
-        collectives_per_group = len(r.shifts)
+        rounds = len(r.shifts)
     elif isinstance(r, Matching):
         paired = sum(1 for i, j in enumerate(r.partner) if j != i)
         spec = {"kind": "matching", "rounds": 1, "paired_nodes": paired}
-        collectives_per_group = 1
+        rounds = 1
     elif isinstance(r, Identity):
         spec = {"kind": "identity", "rounds": 0}
-        collectives_per_group = 0
+        rounds = 0
     else:
         spec = {"kind": "dense", "rounds": 1, "fanin": r.max_degree}
-        collectives_per_group = 1
+        rounds = 1
     spec["wire_multiplier"] = mult
     if layout is not None:
-        per_round = flatbuf.wire_bytes_per_round(layout, compression)
+        split = flatbuf.wire_bytes_split(layout, compression)
+        quantized = (compression == "int8"
+                     and spec["kind"] in ("ppermute", "matching"))
         spec["dtype_groups"] = len(layout.groups)
-        spec["collectives_per_step"] = (collectives_per_group
-                                        * len(layout.groups))
-        spec["bytes_per_node_per_step"] = per_round * mult
+        # int8 rounds ride a second permute per dtype group for the
+        # per-leaf scale payload (the old accounting missed it).
+        spec["collectives_per_step"] = (
+            rounds * len(layout.groups) * (2 if quantized else 1))
+        spec["payload_bytes_per_node_per_step"] = split["payload"] * mult
+        spec["scale_bytes_per_node_per_step"] = split["scales"] * mult
+        spec["bytes_per_node_per_step"] = (
+            (split["payload"] + split["scales"]) * mult)
     return spec

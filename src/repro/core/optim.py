@@ -35,25 +35,22 @@ finite-time ``base_k`` (Takezawa 23) and ``ceca`` (cf. Ding 23) families
 rounds (``Identity`` realizations on off-steps).
 
 Momentum/moment dtype is an explicit argument (``momentum_dtype=...``,
-threaded from each arch's layout config, e.g. dbrx-132b's bf16) -- the old
-process-global ``set_momentum_dtype`` knob is gone.  :func:`make_optimizer`
-survives as a thin deprecation shim: the legacy ``traced_step`` /
-``warmup_allreduce_steps`` kwargs map onto the new mechanisms (step-type
-dispatch and :func:`~repro.core.transforms.allreduce_warmup`) with a
-``DeprecationWarning``; ``W_override`` is gone -- dense time-varying
-schedules go through ``GossipPlan``'s traced-``W`` executable.
+threaded from each arch's layout config, e.g. dbrx-132b's bf16).  The
+legacy ``traced_step`` / ``warmup_allreduce_steps`` / ``W_override``
+``make_optimizer`` kwargs are gone: ``update()`` dispatches on the step
+type, warm-up comes from :func:`~repro.core.transforms.allreduce_warmup`,
+and dense time-varying schedules go through ``GossipPlan``'s traced-``W``
+executable.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 from .topology import Topology, full_averaging
 from .transforms import (
     OptState,
     DecentralizedOptimizer,
     adam_descent,
-    allreduce_warmup,
     average_gradients,
     chain,
     gossip,
@@ -160,47 +157,28 @@ OPTIMIZERS = {
 
 
 def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
-                   *, momentum_dtype=None, compression: str | None = None,
-                   traced_step: bool | None = None,
-                   warmup_allreduce_steps: int | None = None
+                   *, momentum_dtype=None, compression: str | None = None
                    ) -> DecentralizedOptimizer:
-    """Name-keyed construction; also the DEPRECATION SHIM for the legacy
-    flag trifecta:
+    """Name-keyed construction.
 
-    * ``traced_step`` is ignored (with a warning): ``update()`` now
-      dispatches on the step's type -- static Python int selects that
-      step's realization, a traced array takes the ``lax.switch`` path.
-    * ``warmup_allreduce_steps=tau`` maps to the
-      ``allreduce_warmup(tau)(opt)`` wrapping combinator.
-    * the old per-call ``W_override=`` argument is gone entirely: dense
-      time-varying schedules are served by ``GossipPlan``'s single
-      traced-``W`` executable.
+    Schedule handling lives in :class:`repro.core.plan.GossipPlan`
+    (``update()`` dispatches on the step's type: a static Python int
+    selects that step's realization, a traced array takes the
+    ``lax.switch`` path); warm-up phases come from the
+    ``allreduce_warmup(tau)(opt)`` wrapping combinator.
     """
     if name == "parallel_msgd":
-        opt = parallel_msgd(topology.n, beta=beta,
-                            momentum_dtype=momentum_dtype)
-    elif name == "dsgd":
-        opt = dsgd(topology, momentum_dtype=momentum_dtype,
-                   compression=compression)
-    elif name == "d_adamw":
-        opt = d_adamw(topology, b1=beta, momentum_dtype=momentum_dtype,
-                      compression=compression)
-    elif name in OPTIMIZERS:
-        opt = OPTIMIZERS[name](topology, beta=beta,
-                               momentum_dtype=momentum_dtype,
-                               compression=compression)
-    else:
-        raise KeyError(f"unknown optimizer {name!r}; "
-                       f"options: {sorted(OPTIMIZERS) + ['parallel_msgd']}")
-    if traced_step is not None:
-        warnings.warn(
-            "traced_step= is deprecated and ignored: update() dispatches on "
-            "the step type (python int -> static realization, traced array "
-            "-> lax.switch)", DeprecationWarning, stacklevel=2)
-    if warmup_allreduce_steps:
-        warnings.warn(
-            "warmup_allreduce_steps= is deprecated; use "
-            "transforms.allreduce_warmup(tau)(opt)",
-            DeprecationWarning, stacklevel=2)
-        opt = allreduce_warmup(warmup_allreduce_steps)(opt)
-    return opt
+        return parallel_msgd(topology.n, beta=beta,
+                             momentum_dtype=momentum_dtype)
+    if name == "dsgd":
+        return dsgd(topology, momentum_dtype=momentum_dtype,
+                    compression=compression)
+    if name == "d_adamw":
+        return d_adamw(topology, b1=beta, momentum_dtype=momentum_dtype,
+                       compression=compression)
+    if name in OPTIMIZERS:
+        return OPTIMIZERS[name](topology, beta=beta,
+                                momentum_dtype=momentum_dtype,
+                                compression=compression)
+    raise KeyError(f"unknown optimizer {name!r}; "
+                   f"options: {sorted(OPTIMIZERS) + ['parallel_msgd']}")

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from . import gossip
+from .cache import CompileCache
 from .topology import (
     Dense,
     Identity,
@@ -60,36 +61,6 @@ PyTree = Any
 __all__ = ["CompileCache", "GossipPlan"]
 
 
-class CompileCache:
-    """Keyed build-once cache (typically: hashable key -> jitted fn).
-
-    ``max_entries`` bounds the cache with least-recently-used eviction --
-    an aperiodic Matching stream (random_match) visits a fresh pairing
-    every step, so without a bound the executable dict would grow for the
-    whole run.  Periodic schedules never evict (their working set is tiny).
-    """
-
-    def __init__(self, max_entries: int | None = None):
-        from collections import OrderedDict
-        self._cache: "OrderedDict" = OrderedDict()
-        self.max_entries = max_entries
-
-    def get(self, key, build: Callable[[], Any]):
-        if key in self._cache:
-            self._cache.move_to_end(key)
-            return self._cache[key]
-        val = self._cache[key] = build()
-        if self.max_entries is not None and len(self._cache) > self.max_entries:
-            self._cache.popitem(last=False)
-        return val
-
-    def __len__(self) -> int:
-        return len(self._cache)
-
-    def __contains__(self, key) -> bool:
-        return key in self._cache
-
-
 @dataclasses.dataclass
 class GossipPlan:
     """Realization resolution + compile cache for one (topology, phase
@@ -99,8 +70,15 @@ class GossipPlan:
     construction or via :meth:`bind`.  ``warmup_steps`` / ``compression`` /
     ``every`` normally come from the optimizer (see :meth:`for_optimizer`).
     ``mesh`` (a ``jax.sharding.Mesh`` whose ``node`` axis matches ``n``)
-    enables the one-permute ``Matching`` lowering; without it, matchings
-    fall back to a local gather.
+    selects the shard-native engine for every ``Shifts``/``Matching``
+    round: pack, permute, quantize and combine all run inside ``shard_map``
+    over the full mesh, moving only per-shard bytes.  ``specs`` refines the
+    shard_map boundary on multi-axis meshes: a PartitionSpec pytree
+    matching the gossip payload, or a callable ``payload -> spec pytree``
+    (``launch.sharding.gossip_payload_spec_fn`` reapplies the parameter
+    placement rules); None means node-sharded leading axis with replicated
+    inner dims.  Without a mesh, matchings fall back to a local gather and
+    shifts to the global packed roll path.
     """
 
     topology: Topology
@@ -108,6 +86,7 @@ class GossipPlan:
     compression: str | None = None
     fn: Callable | None = None
     mesh: Any = None
+    specs: Any = None
     every: int = 1
     max_compiles: int = 256
 
@@ -133,12 +112,12 @@ class GossipPlan:
 
     @classmethod
     def for_optimizer(cls, opt, fn: Callable | None = None,
-                      mesh=None) -> "GossipPlan":
+                      mesh=None, specs=None) -> "GossipPlan":
         """Plan matching a chain-built optimizer's topology, warm-up phase,
         wire compression, and communication interval."""
         return cls(opt.topology, warmup_steps=opt.warmup_steps,
                    compression=opt.compression, fn=fn, mesh=mesh,
-                   every=getattr(opt, "gossip_every", 1))
+                   specs=specs, every=getattr(opt, "gossip_every", 1))
 
     def bind(self, fn: Callable) -> "GossipPlan":
         """Same plan parameters with ``fn`` bound (fresh compile cache)."""
@@ -202,9 +181,9 @@ class GossipPlan:
         if isinstance(r, Dense):
             W = jnp.asarray(r.W, jnp.float32)
             return lambda t: gossip.mix_dense(t, W)
-        comp, mesh = self.compression, self.mesh
+        comp, mesh, specs = self.compression, self.mesh, self.specs
         return lambda t: gossip.mix_realization(t, r, compression=comp,
-                                                mesh=mesh)
+                                                mesh=mesh, specs=specs)
 
     def _dense_executable(self):
         """The time-varying dense regime's single jitted fn, taking the

@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Callable, Iterator
 
 import numpy as np
@@ -295,10 +294,7 @@ def _metropolis(adj: np.ndarray) -> np.ndarray:
     return W
 
 
-_APERIODIC_SENTINEL = 1 << 30   # legacy ctor shim only
-
-
-@dataclasses.dataclass(frozen=True, init=False)
+@dataclasses.dataclass(frozen=True)
 class Topology:
     """A (possibly time-varying) gossip topology over ``n`` nodes.
 
@@ -312,62 +308,38 @@ class Topology:
         schedule selects from (None when the schedule is
         :class:`Aperiodic` and draws realizations directly).
       schedule: WHICH realization applies at each step (:class:`Static`,
-        :class:`Cyclic`, :class:`RandomPerm` or :class:`Aperiodic`).
+        :class:`Cyclic`, :class:`RandomPerm` or :class:`Aperiodic`);
+        defaults to :class:`Static`/:class:`Cyclic` over ``realizations``.
 
     ``realization(step)`` is the one accessor the production stack consumes
     (:mod:`repro.core.gossip` lowers it, :class:`repro.core.plan.GossipPlan`
     keys compiles by it).  ``weights(step)`` densifies for analysis code.
-
-    The pre-IR constructor kwargs (``period`` / ``weights_fn`` /
-    ``neighbor_schedule`` / ``time_varying``) and the ``neighbor_schedule``
-    read property survive one release as deprecation shims.
     """
 
     name: str
     n: int
-    max_degree: int
-    realizations: tuple | None
-    schedule: Schedule
+    max_degree: int = 0
+    realizations: tuple | None = None
+    schedule: Schedule | None = None
 
-    def __init__(self, name, n, period=None, max_degree=0, weights_fn=None,
-                 neighbor_schedule=None, time_varying=False, *,
-                 realizations=None, schedule=None):
-        if weights_fn is not None or neighbor_schedule is not None:
-            warnings.warn(
-                "Topology(weights_fn=..., neighbor_schedule=...) is "
-                "deprecated; construct with realizations=[Shifts/Matching/"
-                "Dense/...] and schedule=Static()/Cyclic(p)/... instead",
-                DeprecationWarning, stacklevel=2)
-            if neighbor_schedule is not None:
-                def _draw(k, _ns=neighbor_schedule):
-                    self_w, shifts = _ns(k)
-                    return Shifts(self_w, tuple(shifts))
-            else:
-                def _draw(k, _wf=weights_fn):
-                    return Dense(_wf(k))
-            p = 1 if period is None else int(period)
-            if p >= _APERIODIC_SENTINEL:
-                schedule = Aperiodic(_draw)
-                realizations = None
-            else:
-                realizations = tuple(_draw(k) for k in range(max(p, 1)))
-                schedule = Static() if p <= 1 else Cyclic(p)
-        if schedule is None:
-            if not realizations:
+    def __post_init__(self):
+        object.__setattr__(self, "n", int(self.n))
+        object.__setattr__(self, "max_degree", int(self.max_degree))
+        if self.realizations is not None:
+            object.__setattr__(self, "realizations",
+                               tuple(self.realizations))
+        if self.schedule is None:
+            if not self.realizations:
                 raise ValueError("Topology needs a schedule or realizations")
-            schedule = (Static() if len(realizations) == 1
-                        else Cyclic(len(realizations)))
-        if realizations is not None:
-            realizations = tuple(realizations)
-        if realizations is None and not isinstance(schedule, Aperiodic):
+            object.__setattr__(
+                self, "schedule",
+                Static() if len(self.realizations) == 1
+                else Cyclic(len(self.realizations)))
+        if self.realizations is None and not isinstance(self.schedule,
+                                                        Aperiodic):
             raise ValueError(
                 "Topology needs realizations=... unless the schedule is "
                 "Aperiodic (which draws them per step)")
-        object.__setattr__(self, "name", name)
-        object.__setattr__(self, "n", int(n))
-        object.__setattr__(self, "max_degree", int(max_degree))
-        object.__setattr__(self, "realizations", realizations)
-        object.__setattr__(self, "schedule", schedule)
 
     # -- realization IR accessors ---------------------------------------------
 
@@ -395,24 +367,6 @@ class Topology:
     @property
     def time_varying(self) -> bool:
         return not isinstance(self.schedule, Static)
-
-    @property
-    def neighbor_schedule(self):
-        """DEPRECATED read shim: ``step -> (self_weight, [(shift, w), ...])``
-        when every realization is a circulant :class:`Shifts`, else None.
-        Use :meth:`realization` instead."""
-        if self.realization_types() != frozenset({Shifts}):
-            return None
-        warnings.warn(
-            "Topology.neighbor_schedule is deprecated; pattern-match "
-            "Topology.realization(step) (a Shifts IR node) instead",
-            DeprecationWarning, stacklevel=2)
-
-        def sched(k: int):
-            r = self.realization(k)
-            return r.self_w, list(r.shifts)
-
-        return sched
 
     def weights(self, step: int = 0) -> np.ndarray:
         """Densified ``W^{(step)}`` (analysis/reference path)."""

@@ -130,10 +130,14 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
                                         micro_batch=layout.get("micro"),
                                         grads_dtype=grads_dtype)
         # GossipPlan resolves the phase's realization into a mixing
-        # executor (static shifts -> collective-permute HLO; matchings ->
-        # one explicit-pairs permute via the node mesh axis); the dry-run
+        # executor running shard-natively over the full logical mesh (one
+        # explicit-pairs permute per dtype group, payload specs reusing the
+        # parameter placement rules so nothing is resharded); the dry-run
         # keeps its own jit for the sharding/donation annotations.
-        plan = plan_mod.GossipPlan.for_optimizer(opt, mesh=mesh)
+        spec_fn = sharding.gossip_payload_spec_fn(
+            mesh, fsdp_params=knobs.get("fsdp_params", True))
+        plan = plan_mod.GossipPlan.for_optimizer(opt, mesh=mesh,
+                                                 specs=spec_fn)
         fn = partial(step_fn, plan.mix(gossip_phase))
         # roofline wire accounting straight off the realization IR: what
         # this phase's round SHOULD cost per node, before looking at HLO.
@@ -143,6 +147,13 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
         ir["payload_bytes_per_node"] = int(
             bytes_per_elem * meta["n_params"] * max(len(opt.gossip_where), 1)
             * ir["wire_multiplier"])
+        # shard-native engine: each chip permutes only its node's LOCAL
+        # shard -- the per-chip wire term the roofline compares against the
+        # (per-partition) HLO collective bytes.
+        inner_shards = fsdp * meta["model_axis"]
+        ir["inner_shards"] = inner_shards
+        ir["payload_bytes_per_shard"] = (
+            ir["payload_bytes_per_node"] // inner_shards)
         meta["gossip_ir"] = ir
         in_shardings = (p_specs, state_specs, bspec, P())
         out_shardings = (p_specs, state_specs, P())

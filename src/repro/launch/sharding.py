@@ -15,7 +15,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
-__all__ = ["param_specs", "batch_spec", "cache_specs", "named", "axis_size"]
+__all__ = ["param_specs", "batch_spec", "cache_specs", "named", "axis_size",
+           "gossip_payload_spec_fn"]
 
 
 def axis_size(mesh: Mesh, name: str) -> int:
@@ -53,7 +54,10 @@ def _spec_for_leaf(path: tuple, leaf, mesh: Mesh, *, node_axis: bool) -> P:
     names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
     name = names[-1]
     shape = leaf.shape
-    sizes = {a: axis_size(mesh, a) for a in ("fsdp", "model")}
+    # missing logical axes count as size 0: _fits never matches, so the
+    # axis name is never emitted (a bare ("node", "fsdp") mesh works)
+    have = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = {a: have.get(a, 0) for a in ("fsdp", "model")}
     lead = 1 if node_axis else 0          # node axis
     # stacked layer/group axes between node axis and the parameter dims
     # (scan stacking): everything except the trailing `rank` dims.
@@ -105,7 +109,7 @@ def _spec_for_leaf(path: tuple, leaf, mesh: Mesh, *, node_axis: bool) -> P:
                      for i, ax in enumerate(rule))
         return _with_lead(spec, leaf, lead)
 
-    # --- generic fallback: replicate small, shard biggest divisible dim -----
+    # --- generic fallback: shard biggest divisible dims ---------------------
     rank = leaf.ndim - lead
     if rank >= 2 and leaf.size >= 1 << 16:
         dims = list(range(leaf.ndim - rank, leaf.ndim))
@@ -121,6 +125,19 @@ def _spec_for_leaf(path: tuple, leaf, mesh: Mesh, *, node_axis: bool) -> P:
                     used.append(si)
                     break
         return _with_lead(tuple(spec), leaf, lead)
+    if node_axis and rank >= 1:
+        # training (node-stacked) leaves that would otherwise replicate --
+        # norm scales, biases -- still shard their largest divisible dim
+        # over fsdp (ZeRO-style).  Besides the HBM saving, this keeps the
+        # DECLARED spec consistent with what GSPMD propagates through the
+        # optimizer update chain, so the shard-native gossip boundary
+        # (gossip_payload_spec_fn) never pays a payload reshard.
+        dims = list(range(leaf.ndim - rank, leaf.ndim))
+        for i in sorted(dims, key=lambda i: -shape[i]):
+            if shape[i] > 1 and _fits(shape[i], sizes["fsdp"]):
+                spec = [None] * rank
+                spec[i - (leaf.ndim - rank)] = "fsdp"
+                return _with_lead(tuple(spec), leaf, lead)
     return _with_lead((None,) * rank, leaf, lead)
 
 
@@ -201,6 +218,35 @@ def cache_specs(cache: PyTree, mesh: Mesh, batch: int) -> PyTree:
         return P(*spec)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def gossip_payload_spec_fn(mesh: Mesh, *, fsdp_params: bool = True):
+    """Spec resolver for the shard-native gossip engine.
+
+    Returns ``payload -> PartitionSpec pytree`` applying the SAME placement
+    rules as :func:`param_specs` to a gossip payload -- a node-stacked
+    pytree (or tuple of pytrees: DmSGD's ``(m_next, x_next)``, d_adamw's
+    three trees) whose leaves are param-shaped f32 upcasts, so every leaf's
+    name/shape resolves to the rule its parameter uses.  Feeding this to
+    ``GossipPlan(specs=...)`` keeps the ``shard_map`` boundary identical to
+    the surrounding train step's shardings: the engine packs/permutes only
+    local shards and GSPMD never inserts a payload reshard.
+
+    Works on any mesh carrying a ``node`` axis: logical axes the mesh
+    lacks (e.g. ``model`` on a bare ``("node", "fsdp")`` mesh) are simply
+    never emitted, so the specs degrade gracefully -- on a pure
+    ``("node",)`` mesh this matches the engine's ``specs=None`` default.
+    """
+    if "node" not in mesh.axis_names:
+        raise ValueError(
+            f"gossip_payload_spec_fn needs a 'node' mesh axis; got "
+            f"{mesh.axis_names}")
+
+    def spec_fn(payload: PyTree) -> PyTree:
+        return param_specs(payload, mesh, node_axis=True,
+                           fsdp_params=fsdp_params)
+
+    return spec_fn
 
 
 def named(specs: PyTree, mesh: Mesh) -> PyTree:

@@ -23,12 +23,13 @@ from repro.core import schedule
 from repro.core import topology as topo_mod
 from repro.core.plan import GossipPlan
 from repro.data import SyntheticLM
+from repro.launch import sharding as sharding_mod
 from repro.launch import steps as steps_mod
 
 
 def build_trainer(cfg, topology, optimizer_name: str, beta: float,
                   micro_batch=None, momentum_dtype=None, warmup_steps=0,
-                  mesh=None):
+                  mesh=None, payload_specs=None):
     """Returns (opt, step_for) where ``step_for(step)`` is the compiled
     train-step callable for that step's gossip realization.
 
@@ -36,17 +37,28 @@ def build_trainer(cfg, topology, optimizer_name: str, beta: float,
     Matching / Dense / Identity -- warm-up phase keying, realization-keyed
     compile cache) lives in :class:`repro.core.plan.GossipPlan`; this is
     just optimizer + step function + plan wiring.  Pass a ``mesh`` whose
-    ``node`` axis matches the node count to lower Matching rounds
-    (one_peer_hypercube, random_match, base_k) to one explicit-pairs
-    collective-permute; without it they run as local gathers.
+    ``node`` axis matches the node count to run every Shifts/Matching round
+    shard-natively (one explicit-pairs collective-permute per dtype group,
+    each device moving only its local shard); on a multi-axis mesh
+    ``payload_specs`` carries the payload's PartitionSpecs -- by default
+    the full ("node", "fsdp", "model") logical mesh reuses the parameter
+    placement rules (:func:`repro.launch.sharding.gossip_payload_spec_fn`)
+    so inner-dim shardings pass through the gossip untouched.
     """
     opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta,
                                    momentum_dtype=momentum_dtype)
     if warmup_steps:
         from repro.core.transforms import allreduce_warmup
         opt = allreduce_warmup(warmup_steps)(opt)
+    if (payload_specs is None and mesh is not None
+            and "node" in mesh.axis_names and len(mesh.axis_names) > 1):
+        # multi-axis mesh: any default spec would declare the payload's
+        # inner dims replicated and GSPMD would reshard fsdp/model-sharded
+        # leaves at the shard_map boundary -- the bug the engine fixes
+        payload_specs = sharding_mod.gossip_payload_spec_fn(mesh)
     step_fn = steps_mod.make_train_step(cfg, opt, micro_batch=micro_batch)
-    plan = GossipPlan.for_optimizer(opt, fn=step_fn, mesh=mesh)
+    plan = GossipPlan.for_optimizer(opt, fn=step_fn, mesh=mesh,
+                                    specs=payload_specs)
     return opt, plan.step_fn
 
 

@@ -351,30 +351,23 @@ def test_random_perm_schedule_exact_each_period():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (one release)
+# IR-native construction (the one-release deprecation shims are gone)
 # ---------------------------------------------------------------------------
 
-def test_legacy_ctor_kwargs_warn_and_work():
-    W = np.full((4, 4), 0.25)
-    with pytest.warns(DeprecationWarning, match="weights_fn"):
-        top = topology.Topology("legacy", 4, 1, 3, lambda k: W)
-    np.testing.assert_allclose(top.weights(0), W)
-    assert isinstance(top.realization(0), topology.Dense)
-    with pytest.warns(DeprecationWarning, match="neighbor_schedule"):
-        top = topology.Topology(
-            "legacy_ring", 4, 1, 2,
-            lambda k: W, neighbor_schedule=lambda k: (0.5, [(1, 0.5)]))
-    r = top.realization(0)
-    assert isinstance(r, topology.Shifts)
-    assert r.shifts == ((1, 0.5),)
-
-
-def test_legacy_neighbor_schedule_property_shim():
-    top = topology.one_peer_exponential(8)
-    with pytest.warns(DeprecationWarning, match="neighbor_schedule"):
-        ns = top.neighbor_schedule
-    assert ns is not None
-    assert ns(1) == (0.5, [(-2, 0.5)])
-    # non-circulant topologies return None (legacy "dense path" sentinel)
-    assert topology.star(8).neighbor_schedule is None
-    assert topology.one_peer_hypercube(8).neighbor_schedule is None
+def test_legacy_ctor_kwargs_removed():
+    """The pre-IR ctor kwargs (period / weights_fn / neighbor_schedule /
+    time_varying) and the neighbor_schedule read property no longer exist;
+    construction is realizations= / schedule= only."""
+    with pytest.raises(TypeError):
+        topology.Topology("legacy", 4, 1, 3, lambda k: np.eye(4))
+    with pytest.raises(TypeError):
+        topology.Topology("legacy", 4,
+                          neighbor_schedule=lambda k: (0.5, [(1, 0.5)]))
+    assert not hasattr(topology.one_peer_exponential(8), "neighbor_schedule")
+    # IR-native construction stays the one path
+    top = topology.Topology("ir", 4, max_degree=1,
+                            realizations=(topology.Shifts(0.5, ((1, 0.5),)),))
+    assert isinstance(top.schedule, topology.Static)
+    assert isinstance(top.realization(0), topology.Shifts)
+    with pytest.raises(ValueError, match="schedule or realizations"):
+        topology.Topology("empty", 4)

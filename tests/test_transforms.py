@@ -285,22 +285,24 @@ def test_plan_matching_schedule_not_frozen(n=8):
 
 
 def test_plan_dense_schedule_single_executable(n=8):
-    """A time-varying DENSE schedule (legacy weights_fn topologies) still
-    compiles ONE executable with the realized W^{(k)} as a traced arg."""
-    rng = np.random.default_rng(0)
+    """A time-varying DENSE schedule (an Aperiodic stream of Dense draws)
+    still compiles ONE executable with the realized W^{(k)} as a traced
+    arg."""
 
     def wf(k):
-        # random doubly-stochastic-ish symmetric W per step (exactness of
-        # the values is irrelevant; the executable identity is the point)
-        A = rng.random((n, n)) + np.eye(n)
+        # random doubly-stochastic-ish symmetric W per step, deterministic
+        # in k (exactness of the values is irrelevant; the executable
+        # identity is the point)
+        A = np.random.default_rng(k).random((n, n)) + np.eye(n)
         A = A + A.T
         for _ in range(50):
             A /= A.sum(1, keepdims=True)
             A = (A + A.T) / 2
         return A
 
-    with pytest.warns(DeprecationWarning, match="weights_fn"):
-        top = topology.Topology("legacy_dense", n, 1 << 30, n - 1, wf)
+    top = topology.Topology(
+        "aperiodic_dense", n, max_degree=n - 1,
+        schedule=topology.Aperiodic(lambda k: topology.Dense(wf(k))))
     plan = GossipPlan(top, fn=lambda mix, t: mix(t))
     tree = _tree(n, seed=5)
     plan.step_fn(0)(tree)
@@ -387,16 +389,16 @@ def test_plan_gossip_every_identity_offsteps(n=8):
                                    rtol=1e-5, atol=1e-5)
 
 
-# --- deprecation shim -------------------------------------------------------
-
-def test_make_optimizer_legacy_kwargs_warn_and_map():
+def test_make_optimizer_legacy_kwargs_removed():
+    """The traced_step / warmup_allreduce_steps shims are gone: update()
+    dispatches on the step type and warm-up is allreduce_warmup(tau)."""
     top = topology.one_peer_exponential(8)
-    with pytest.warns(DeprecationWarning, match="traced_step"):
-        opt = optim.make_optimizer("dmsgd", top, beta=0.9, traced_step=True)
-    assert opt.warmup_steps == 0
-    with pytest.warns(DeprecationWarning, match="warmup_allreduce_steps"):
-        opt = optim.make_optimizer("dmsgd", top, beta=0.9,
-                                   warmup_allreduce_steps=3)
+    with pytest.raises(TypeError):
+        optim.make_optimizer("dmsgd", top, beta=0.9, traced_step=True)
+    with pytest.raises(TypeError):
+        optim.make_optimizer("dmsgd", top, beta=0.9,
+                             warmup_allreduce_steps=3)
+    opt = transforms.allreduce_warmup(3)(optim.make_optimizer("dmsgd", top))
     assert opt.warmup_steps == 3
     with pytest.raises(KeyError):
         optim.make_optimizer("nope", top)
