@@ -57,19 +57,26 @@ def grads(h, y, xs, key, batch):
 
 
 def run(topname, n, h, y, x_star, T, lr0, beta=0.8, seed=1,
-        optimizer="dmsgd"):
+        optimizer="dmsgd", overlap=False):
     d = h.shape[-1]
     if topname == "parallel":
         opt = optim.parallel_msgd(n, beta=beta)
     else:
         opt = optim.make_optimizer(optimizer,
                                    topology.get_topology(topname, n),
-                                   beta=beta)
+                                   beta=beta, overlap=overlap)
     # GossipPlan compiles one update executable per gossip realization
     # (the realization-keyed cache that used to be private to
-    # launch.train.build_trainer).
-    plan = GossipPlan.for_optimizer(
-        opt, fn=lambda mix, p, s, g, lr: opt.update_with_mix(p, s, g, lr, mix))
+    # launch.train.build_trainer).  With --overlap the executables are
+    # PIPELINED: step k mixes step k-1's payload (carried in the state's
+    # flat buffer) and the measured iterate is the flushed view.
+    if opt.overlap:
+        def step_fn(io, p, s, g, lr):
+            return opt.update_pipelined(p, s, g, lr, io)
+    else:
+        def step_fn(mix, p, s, g, lr):
+            return opt.update_with_mix(p, s, g, lr, mix)
+    plan = GossipPlan.for_optimizer(opt, fn=step_fn)
     params = {"x": jnp.zeros((n, d))}
     state = opt.init(params)
     key = jax.random.key(seed)
@@ -80,7 +87,10 @@ def run(topname, n, h, y, x_star, T, lr0, beta=0.8, seed=1,
         lr = lr0 * (0.5 ** (k // 1000))
         params, state = plan.step_fn(k)(params, state, g, lr)
         if k % 25 == 0:
-            mse = float(jnp.mean(jnp.sum((params["x"] - x_star) ** 2, -1)))
+            # flush is pure: metrics read the mixed view of the pipeline
+            # without disturbing the live in-flight buffer
+            ev, _ = plan.flush_step_fn(k + 1)(params, state)
+            mse = float(jnp.mean(jnp.sum((ev["x"] - x_star) ** 2, -1)))
             curve.append((k, mse))
     return curve
 
@@ -104,6 +114,11 @@ def main():
              "at degree k for any n with prime factors <= k+1) and ceca "
              "(CECA-style circulant schedule, cf. Ding 23: exact average "
              "in L rounds for ANY n, one permute per shift)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="one-step-delayed (overlapped) gossip: the mix "
+                         "of step k's payload lands at step k+1, hiding "
+                         "the permute under the next backward; curves "
+                         "measure the flushed (mixed) iterates")
     ap.add_argument("--out", default="results/topology_compare.csv")
     args = ap.parse_args()
 
@@ -115,7 +130,8 @@ def main():
     tops = [t.strip() for t in args.tops.split(",") if t.strip()]
     curves = {t: run(t, args.nodes, h, y, x_star, args.steps,
                      lr0=0.2 if t == "parallel" else lr0,
-                     optimizer=args.optimizer)
+                     optimizer=args.optimizer,
+                     overlap=args.overlap and t != "parallel")
               for t in tops}
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -18,10 +18,20 @@ independent of the leaf count.  One lowering per realization-IR node
 * ``Matching`` -> :func:`mix_matching`: an arbitrary pairing is ONE
   explicit-pairs ``collective-permute`` per dtype group -- random matchings
   and the one-peer hypercube never fall to the dense all-gather route.
-* ``Dense``    -> :func:`mix_dense`: one ``einsum('ij,jb->ib')`` per dtype
-  group.  Exact for *any* doubly-stochastic ``W`` but lowers to an
-  all-gather over the node axis: O(n) bytes per node.
+* ``Dense``    -> :func:`mix_dense`: shard-native with a mesh -- one
+  ``psum`` for uniform-row ``W`` (exact averaging), else the self term +
+  one explicit-pairs permute per nonzero circulant distance class, so the
+  payload is never resharded; the no-mesh / traced-``W`` route is one
+  ``einsum('ij,jb->ib')`` per dtype group (an all-gather: O(n) bytes).
 * ``Identity`` -> no-op (skipped round, ``gossip(every=k)`` off-steps).
+
+The **overlapped pipeline** splits every one of these into send/combine
+halves: :func:`pack_payload` produces the wire buffers at the end of step
+t (carried as optimizer state), :func:`delayed_mix` permutes + combines
+them at the top of step t+1 -- with no data dependency on that step's
+forward/backward, so XLA's scheduler hides the collective under the next
+microbatch's compute (one-step-delayed mixing; see
+:class:`repro.core.plan.OverlapIO`).
 
 **Shard-native path** (pass ``mesh=`` whose node axis matches ``n``, plus
 optional per-leaf ``specs=``): packing, the permutes, the int8 quantizer and
@@ -69,6 +79,7 @@ PyTree = Any
 
 __all__ = ["mix_dense", "mix_shifts", "mix_matching", "mix_realization",
            "mix", "mix_switch", "gossip_spec", "mix_shifts_per_leaf",
+           "pack_payload", "delayed_mix",
            "set_pallas_mode", "AperiodicScheduleError"]
 
 
@@ -115,12 +126,34 @@ def _combine(x, recvs, w_self: float, ws: tuple, local: bool = False):
     return gm_ref.gossip_mix_ref(x, recvs, float(w_self), ws)
 
 
-def mix_dense(tree: PyTree, W: jax.Array) -> PyTree:
+def mix_dense(tree: PyTree, W, *, mesh=None, axis_name: str = "node",
+              specs=None) -> PyTree:
     """x_i <- sum_j W[i, j] x_j  over the leading node axis of every leaf.
 
-    One (n, n) x (n, B) matmul per dtype group on the packed buffer."""
+    With a ``mesh`` whose node axis matches ``n`` (and a concrete, untraced
+    ``W``), the round runs shard-natively inside ``shard_map`` -- the self
+    term plus one explicit-pairs ``lax.ppermute`` per nonzero circulant
+    distance class of ``W`` (a single ``psum`` when every row of ``W`` is
+    identical, i.e. exact averaging) -- so static-exp/grid-style dense
+    realizations no longer force GSPMD to reshard the payload on multi-axis
+    meshes.  Without a mesh (or with a traced ``W``, the time-varying dense
+    executable), one ``einsum('ij,jb->ib')`` per dtype group on the packed
+    buffer: exact for any doubly-stochastic ``W`` but an all-gather over
+    the node axis."""
+    n = _node_count(tree)
+    if (not isinstance(W, jax.core.Tracer)
+            and np.asarray(W).shape[0] == n
+            and _shard_native(mesh, axis_name, n)):
+        from jax.experimental.shard_map import shard_map
+
+        Wnp = np.asarray(W, np.float64)
+        spec_tree = _resolve_specs(tree, specs, axis_name)
+        return shard_map(
+            lambda t: _local_dense(t, Wnp, axis_name), mesh=mesh,
+            in_specs=(spec_tree,), out_specs=spec_tree,
+            check_rep=False)(tree)
     layout, bufs = flatbuf.pack(tree)
-    Wl = W.astype(jnp.float32)
+    Wl = jnp.asarray(W).astype(jnp.float32)
     out = [jnp.einsum("ij,jb->ib", Wl, b.astype(jnp.float32)).astype(b.dtype)
            for b in bufs]
     return flatbuf.unpack(layout, out)
@@ -184,58 +217,106 @@ def _resolve_specs(tree: PyTree, specs, axis_name: str):
     return specs
 
 
+def _local_round(t: PyTree, *, rounds: list, self_w: float,
+                 compression: str | None, fixed_arr, axis_name: str,
+                 inner_axes: tuple) -> PyTree:
+    """One Shifts/Matching gossip round on a device's LOCAL shard (runs
+    inside ``shard_map``): pack the local block of every leaf
+    (``pad_multiple=1`` -- per-shard tile padding happens inside
+    ``ops.gossip_mix``), permute only those bytes over the node axis,
+    combine, and unpack to the same local shapes.  ``fixed_arr`` is an
+    optional (n,) bool mask of matching fixed points whose nodes must keep
+    their value bit-exactly."""
+    ws = tuple(w for _, w in rounds)
+    layout = flatbuf.layout_of(t, pad_multiple=1)
+    layout, bufs = flatbuf.pack(t, layout)
+    keep = (None if fixed_arr is None
+            else fixed_arr[jax.lax.axis_index(axis_name)])
+    out = []
+    if compression == "int8":
+        scales = _scale_columns(jax.tree.leaves(t), layout, inner_axes)
+        for g, buf, sc in zip(layout.groups, bufs, scales):
+            seg = jnp.asarray(g.seg_ids)
+            x32 = buf.astype(jnp.float32)
+            q = jnp.round(x32 / sc[:, seg]).astype(jnp.int8)
+            acc = (self_w * x32) if self_w else None
+            for pairs, w in rounds:
+                rq = jax.lax.ppermute(q, axis_name, perm=pairs)
+                rs = jax.lax.ppermute(sc, axis_name, perm=pairs)
+                r = w * (rq.astype(jnp.float32) * rs[:, seg])
+                acc = r if acc is None else acc + r
+            if keep is not None:
+                # fixed points keep their FULL-PRECISION buffer (never
+                # the quantized image, and never the w_self*x +
+                # w_peer*x blend, which is only exact for w_self=0.5)
+                acc = jnp.where(keep, x32, acc)
+            out.append(acc.astype(buf.dtype))
+    else:
+        for buf in bufs:
+            recvs = [jax.lax.ppermute(buf, axis_name, perm=pairs)
+                     for pairs, _ in rounds]
+            o = _combine(buf, recvs, self_w, ws, local=True)
+            if keep is not None:
+                o = jnp.where(keep, buf, o)
+            out.append(o)
+    return flatbuf.unpack(layout, out)
+
+
+def _local_dense(t: PyTree, W: np.ndarray, axis_name: str) -> PyTree:
+    """One dense round on a device's LOCAL shard (inside ``shard_map``).
+
+    Uniform-row ``W`` (exact averaging, the all-reduce warm-up) is ONE
+    ``psum`` over the node axis; any other ``W`` is the self term plus one
+    explicit-pairs permute per nonzero circulant distance class ``s``
+    (``W[i, (i-s) % n] != 0`` for some ``i``), each receive weighted by
+    the receiving node's own matrix entry.  Same wire bytes as the
+    all-gather in the worst case, but inner-dim shardings are untouched:
+    no GSPMD reshard of the payload on multi-axis meshes."""
+    n = W.shape[0]
+    layout = flatbuf.layout_of(t, pad_multiple=1)
+    layout, bufs = flatbuf.pack(t, layout)
+    i = jax.lax.axis_index(axis_name)
+    out = []
+    if np.allclose(W, W[0:1, :]):
+        row = jnp.asarray(W[0], jnp.float32)
+        for buf in bufs:
+            o = jax.lax.psum(row[i] * buf.astype(jnp.float32), axis_name)
+            out.append(o.astype(buf.dtype))
+        return flatbuf.unpack(layout, out)
+    diag = jnp.asarray(np.ascontiguousarray(np.diagonal(W)), jnp.float32)
+    shifts = []
+    for s in range(1, n):
+        col = np.array([W[j, (j - s) % n] for j in range(n)])
+        if np.any(col):
+            shifts.append((s, jnp.asarray(col, jnp.float32)))
+    for buf in bufs:
+        acc = diag[i] * buf.astype(jnp.float32)
+        for s, col in shifts:
+            recv = jax.lax.ppermute(buf, axis_name,
+                                    perm=_shift_pairs(n, s))
+            acc = acc + col[i] * recv.astype(jnp.float32)
+        out.append(acc.astype(buf.dtype))
+    return flatbuf.unpack(layout, out)
+
+
 def _mix_sharded(tree: PyTree, *, mesh, specs, axis_name: str, rounds: list,
                  self_w: float, compression: str | None,
                  fixed=None) -> PyTree:
     """One gossip round entirely inside ``shard_map`` over the full mesh.
 
-    ``rounds`` is ``[(ppermute send pairs, weight), ...]``; each device
-    packs its LOCAL block of every leaf (``pad_multiple=1`` -- per-shard
-    tile padding happens inside ``ops.gossip_mix``), permutes only those
-    bytes over the node axis, combines, and unpacks to the same local
-    shapes -- so the payload is never resharded and inner-dim shardings
-    pass through untouched.  ``fixed`` is an optional (n,) bool mask of
-    matching fixed points whose nodes must keep their value bit-exactly."""
+    ``rounds`` is ``[(ppermute send pairs, weight), ...]``; the per-shard
+    body is :func:`_local_round` -- the payload is never resharded and
+    inner-dim (fsdp/model) shardings pass through untouched."""
     from jax.experimental.shard_map import shard_map
 
     spec_tree = _resolve_specs(tree, specs, axis_name)
     inner_axes = tuple(a for a in mesh.axis_names if a != axis_name)
     fixed_arr = None if fixed is None else jnp.asarray(fixed)
-    ws = tuple(w for _, w in rounds)
 
     def local_fn(t):
-        layout = flatbuf.layout_of(t, pad_multiple=1)
-        layout, bufs = flatbuf.pack(t, layout)
-        keep = (None if fixed_arr is None
-                else fixed_arr[jax.lax.axis_index(axis_name)])
-        out = []
-        if compression == "int8":
-            scales = _scale_columns(jax.tree.leaves(t), layout, inner_axes)
-            for g, buf, sc in zip(layout.groups, bufs, scales):
-                seg = jnp.asarray(g.seg_ids)
-                x32 = buf.astype(jnp.float32)
-                q = jnp.round(x32 / sc[:, seg]).astype(jnp.int8)
-                acc = (self_w * x32) if self_w else None
-                for pairs, w in rounds:
-                    rq = jax.lax.ppermute(q, axis_name, perm=pairs)
-                    rs = jax.lax.ppermute(sc, axis_name, perm=pairs)
-                    r = w * (rq.astype(jnp.float32) * rs[:, seg])
-                    acc = r if acc is None else acc + r
-                if keep is not None:
-                    # fixed points keep their FULL-PRECISION buffer (never
-                    # the quantized image, and never the w_self*x +
-                    # w_peer*x blend, which is only exact for w_self=0.5)
-                    acc = jnp.where(keep, x32, acc)
-                out.append(acc.astype(buf.dtype))
-        else:
-            for buf in bufs:
-                recvs = [jax.lax.ppermute(buf, axis_name, perm=pairs)
-                         for pairs, _ in rounds]
-                o = _combine(buf, recvs, self_w, ws, local=True)
-                if keep is not None:
-                    o = jnp.where(keep, buf, o)
-                out.append(o)
-        return flatbuf.unpack(layout, out)
+        return _local_round(t, rounds=rounds, self_w=self_w,
+                            compression=compression, fixed_arr=fixed_arr,
+                            axis_name=axis_name, inner_axes=inner_axes)
 
     return shard_map(local_fn, mesh=mesh, in_specs=(spec_tree,),
                      out_specs=spec_tree, check_rep=False)(tree)
@@ -245,6 +326,150 @@ def _shift_pairs(n: int, shift: int) -> list:
     """Send pairs for a circulant +shift: node i sends to (i + s) mod n,
     i.e. receives from (i - s) mod n == jnp.roll(x, s, axis=0) semantics."""
     return [(i, (i + shift) % n) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Overlapped (delayed-mix) pipeline: send / combine halves
+# ---------------------------------------------------------------------------
+#
+# The synchronous paths above pack, permute and combine in one call.  The
+# overlapped pipeline splits that: :func:`pack_payload` produces the wire
+# buffers at the END of step t (the payload rides in the optimizer state),
+# and :func:`delayed_mix` at the TOP of step t+1 issues the permutes on
+# those buffers and applies the weighted combine -- the permutes have no
+# data dependency on step t+1's forward/backward, so XLA's scheduler can
+# run them concurrently with the next microbatch's compute.
+
+def _buffer_specs(mesh, axis_name: str, n_groups: int) -> tuple:
+    """PartitionSpecs for the in-flight packed buffers: node-sharded rows,
+    flat columns sharded over EVERY inner mesh axis (each device's local
+    block is its per-shard pack, so the assembled global buffer is just the
+    concatenation -- only ever consumed by the matching ``shard_map``)."""
+    from jax.sharding import PartitionSpec as P
+    inner = tuple(a for a in mesh.axis_names if a != axis_name)
+    spec = P(axis_name, inner) if inner else P(axis_name)
+    return tuple(spec for _ in range(n_groups))
+
+
+def _local_template(template: PyTree, spec_tree: PyTree, mesh,
+                    axis_name: str) -> PyTree:
+    """ShapeDtypeStructs of each leaf's per-device block under
+    ``spec_tree`` (static -- used to recover the per-shard flat layout
+    when only the packed buffers cross the ``shard_map`` boundary)."""
+    sizes = dict(mesh.shape)
+
+    def one(x, spec):
+        shape = list(x.shape)
+        for d, ax in enumerate(tuple(spec)):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shape[d] //= sizes.get(a, 1)
+        return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
+
+    return jax.tree.map(one, template, spec_tree)
+
+
+def pack_payload(tree: PyTree, *, mesh=None, axis_name: str = "node",
+                 specs=None) -> tuple:
+    """SEND half of the overlapped pipeline: pack ``tree`` into its wire
+    buffers (one ``(n, B)`` buffer per dtype group) WITHOUT mixing.
+
+    Shard-native (mesh whose node axis matches ``n``): each device packs
+    only its local block (``pad_multiple=1``) inside ``shard_map``, so the
+    buffer is born with the payload's shardings and the next step's
+    :func:`delayed_mix` permutes it without any reshard.  Without a mesh,
+    the global tile-padded pack of :mod:`repro.core.flatbuf` -- in both
+    cases the SAME granularity the synchronous mix of that path uses, so
+    delayed mixing is bit-identical to it."""
+    n = _node_count(tree)
+    if not _shard_native(mesh, axis_name, n):
+        _, bufs = flatbuf.pack(tree)
+        return tuple(bufs)
+    from jax.experimental.shard_map import shard_map
+
+    spec_tree = _resolve_specs(tree, specs, axis_name)
+    ltpl = _local_template(tree, spec_tree, mesh, axis_name)
+    n_groups = len(flatbuf.layout_of(ltpl, pad_multiple=1).groups)
+
+    def local_fn(t):
+        layout = flatbuf.layout_of(t, pad_multiple=1)
+        _, bufs = flatbuf.pack(t, layout)
+        return tuple(bufs)
+
+    return shard_map(local_fn, mesh=mesh, in_specs=(spec_tree,),
+                     out_specs=_buffer_specs(mesh, axis_name, n_groups),
+                     check_rep=False)(tree)
+
+
+def delayed_mix(template: PyTree, bufs, realization, *,
+                compression: str | None = None, mesh=None,
+                axis_name: str = "node", specs=None) -> PyTree:
+    """COMBINE half of the overlapped pipeline: apply ``realization`` to
+    the in-flight packed buffers and unpack to ``template``'s structure.
+
+    ``template`` is a pytree of arrays or ``ShapeDtypeStruct``s with the
+    payload's global shapes/dtypes (it is never read, only its structure);
+    ``bufs`` must come from :func:`pack_payload` with the same mesh/specs.
+    The permutes depend only on ``bufs`` -- never on anything computed in
+    the current step -- which is the whole point: XLA schedules them under
+    the step's forward/backward.  Every realization kind is supported
+    (``Identity`` just unpacks; ``Dense`` runs the shard-native dense round
+    when a mesh is given), and each path is bit-identical to packing +
+    synchronously mixing the same payload."""
+    bufs = tuple(bufs)
+    leaves = jax.tree.leaves(template)
+    n = int(leaves[0].shape[0])
+    if not _shard_native(mesh, axis_name, n):
+        layout = flatbuf.layout_of(template)
+        return mix_realization(flatbuf.unpack(layout, bufs), realization,
+                               compression=compression)
+    from jax.experimental.shard_map import shard_map
+
+    spec_tree = _resolve_specs(template, specs, axis_name)
+    ltpl = _local_template(template, spec_tree, mesh, axis_name)
+    local_layout = flatbuf.layout_of(ltpl, pad_multiple=1)
+    inner_axes = tuple(a for a in mesh.axis_names if a != axis_name)
+
+    if isinstance(realization, Identity):
+        def local_fn(bs):
+            return flatbuf.unpack(local_layout, list(bs))
+    elif isinstance(realization, Dense):
+        if compression is not None:
+            raise ValueError(
+                f"compression={compression!r} has no dense-matrix wire "
+                f"format; only Shifts/Matching realizations quantize")
+        Wnp = np.asarray(realization.W, np.float64)
+
+        def local_fn(bs):
+            return _local_dense(flatbuf.unpack(local_layout, list(bs)),
+                                Wnp, axis_name)
+    elif isinstance(realization, (Shifts, Matching)):
+        if isinstance(realization, Shifts):
+            rounds = [(_shift_pairs(n, s), w) for s, w in realization.shifts]
+            self_w, fixed_arr = realization.self_w, None
+        else:
+            pairs = [(src, dst) for dst, src in enumerate(realization.partner)]
+            rounds = [(pairs, 1.0 - realization.w_self)]
+            self_w = realization.w_self
+            fixed = np.fromiter(
+                (j == i for i, j in enumerate(realization.partner)),
+                dtype=bool, count=n)
+            fixed_arr = jnp.asarray(fixed) if fixed.any() else None
+
+        def local_fn(bs):
+            t = flatbuf.unpack(local_layout, list(bs))
+            return _local_round(t, rounds=rounds, self_w=self_w,
+                                compression=compression,
+                                fixed_arr=fixed_arr, axis_name=axis_name,
+                                inner_axes=inner_axes)
+    else:
+        raise TypeError(f"not a realization IR node: {realization!r}")
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(_buffer_specs(mesh, axis_name, len(local_layout.groups)),),
+        out_specs=spec_tree, check_rep=False)(bufs)
 
 
 def mix_shifts(tree: PyTree, self_weight: float,
@@ -413,7 +638,8 @@ def mix_realization(tree: PyTree, realization, *,
             raise ValueError(
                 f"compression={compression!r} has no dense-matrix wire "
                 f"format; only Shifts/Matching realizations quantize")
-        return mix_dense(tree, jnp.asarray(realization.W, jnp.float32))
+        return mix_dense(tree, realization.W, mesh=mesh,
+                         axis_name=axis_name, specs=specs)
     raise TypeError(f"not a realization IR node: {realization!r}")
 
 

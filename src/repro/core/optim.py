@@ -76,44 +76,58 @@ __all__ = [
 
 
 def dmsgd(topology: Topology, beta: float = 0.9, *, momentum_dtype=None,
-          compression: str | None = None) -> DecentralizedOptimizer:
-    """Algorithm 1 (paper's DmSGD); fused single-payload gossip."""
+          compression: str | None = None,
+          overlap: bool = False) -> DecentralizedOptimizer:
+    """Algorithm 1 (paper's DmSGD); fused single-payload gossip.
+
+    ``overlap=True`` selects the one-step-delayed (overlapped) mix: the
+    payload's permute is issued at the top of the NEXT step so it hides
+    under that step's backward -- see :func:`repro.core.transforms.gossip`.
+    """
     return chain(
         trace_momentum(beta, dtype=momentum_dtype),
         scale_by_lr("m"),
         quantize_int8() if compression == "int8" else None,
-        gossip(where=("m_next", "x_next")),
+        gossip(where=("m_next", "x_next"), overlap=overlap),
         topology=topology, name="dmsgd", beta=beta)
 
 
 def dsgd(topology: Topology, *, momentum_dtype=None,
-         compression: str | None = None) -> DecentralizedOptimizer:
+         compression: str | None = None,
+         overlap: bool = False) -> DecentralizedOptimizer:
     """Decentralized SGD = DmSGD with beta = 0 (Remark 8)."""
     opt = dmsgd(topology, beta=0.0, momentum_dtype=momentum_dtype,
-                compression=compression)
+                compression=compression, overlap=overlap)
     return dataclasses.replace(opt, name="dsgd")
 
 
 def vanilla_dmsgd(topology: Topology, beta: float = 0.9, *,
                   momentum_dtype=None,
-                  compression: str | None = None) -> DecentralizedOptimizer:
+                  compression: str | None = None,
+                  overlap: bool = False) -> DecentralizedOptimizer:
     """Vanilla DmSGD [3]: no momentum exchange."""
     return chain(
         trace_momentum(beta, dtype=momentum_dtype),
         scale_by_lr("m_next"),
         quantize_int8() if compression == "int8" else None,
-        gossip(where=("x_next",)),
+        gossip(where=("x_next",), overlap=overlap),
         topology=topology, name="vanilla_dmsgd", beta=beta)
 
 
 def qg_dmsgd(topology: Topology, beta: float = 0.9, *, momentum_dtype=None,
-             compression: str | None = None) -> DecentralizedOptimizer:
-    """QG-DmSGD [32]: quasi-global momentum tracks the averaged trajectory."""
+             compression: str | None = None,
+             overlap: bool = False) -> DecentralizedOptimizer:
+    """QG-DmSGD [32]: quasi-global momentum tracks the averaged trajectory.
+
+    No overlapped variant exists: the quasi-global EMA reads the MIXED
+    ``x_next`` in the same step, which delayed mixing only produces one
+    step later (``overlap=True`` raises, from :func:`chain`'s validation).
+    """
     return chain(
         trace_momentum(beta, dtype=momentum_dtype, out="qg_dir"),
         scale_by_lr("qg_dir"),
         quantize_int8() if compression == "int8" else None,
-        gossip(where=("x_next",)),
+        gossip(where=("x_next",), overlap=overlap),
         quasi_global_momentum(beta),
         topology=topology, name="qg_dmsgd", beta=beta)
 
@@ -134,7 +148,8 @@ def parallel_msgd(n: int, beta: float = 0.9, *,
 def d_adamw(topology: Topology, b1: float = 0.9, b2: float = 0.999, *,
             eps: float = 1e-8, weight_decay: float = 0.0,
             momentum_dtype=None,
-            compression: str | None = None) -> DecentralizedOptimizer:
+            compression: str | None = None,
+            overlap: bool = False) -> DecentralizedOptimizer:
     """Decentralized AdamW (beyond-paper): both Adam moments are gossiped
     together with the params.  The three f32 trees share one flat-buffer
     dtype group, so one-peer exponential still costs ONE collective-permute
@@ -143,7 +158,7 @@ def d_adamw(topology: Topology, b1: float = 0.9, b2: float = 0.999, *,
         trace_adam_moments(b1, b2, dtype=momentum_dtype),
         adam_descent(eps=eps, weight_decay=weight_decay),
         quantize_int8() if compression == "int8" else None,
-        gossip(where=("mu_next", "nu_next", "x_next")),
+        gossip(where=("mu_next", "nu_next", "x_next"), overlap=overlap),
         topology=topology, name="d_adamw", beta=b1)
 
 
@@ -157,8 +172,8 @@ OPTIMIZERS = {
 
 
 def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
-                   *, momentum_dtype=None, compression: str | None = None
-                   ) -> DecentralizedOptimizer:
+                   *, momentum_dtype=None, compression: str | None = None,
+                   overlap: bool = False) -> DecentralizedOptimizer:
     """Name-keyed construction.
 
     Schedule handling lives in :class:`repro.core.plan.GossipPlan`
@@ -168,17 +183,21 @@ def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
     ``allreduce_warmup(tau)(opt)`` wrapping combinator.
     """
     if name == "parallel_msgd":
+        if overlap:
+            raise ValueError(
+                "parallel_msgd's exact all-reduce has no gossip payload "
+                "to overlap; pick a decentralized optimizer")
         return parallel_msgd(topology.n, beta=beta,
                              momentum_dtype=momentum_dtype)
     if name == "dsgd":
         return dsgd(topology, momentum_dtype=momentum_dtype,
-                    compression=compression)
+                    compression=compression, overlap=overlap)
     if name == "d_adamw":
         return d_adamw(topology, b1=beta, momentum_dtype=momentum_dtype,
-                       compression=compression)
+                       compression=compression, overlap=overlap)
     if name in OPTIMIZERS:
         return OPTIMIZERS[name](topology, beta=beta,
                                 momentum_dtype=momentum_dtype,
-                                compression=compression)
+                                compression=compression, overlap=overlap)
     raise KeyError(f"unknown optimizer {name!r}; "
                    f"options: {sorted(OPTIMIZERS) + ['parallel_msgd']}")

@@ -35,6 +35,15 @@ returns the compiled callable for step ``k``'s realization and
 ``plan.mix(k)`` the bare executor (for eager use, benchmarks, and dry-run
 lowering).  :class:`CompileCache` is the underlying keyed-jit cache, also
 used standalone (e.g. ``launch.serve`` caches its decode executable there).
+
+**Overlap plans** (``overlap=True``, from ``gossip(..., overlap=True)``
+optimizers) compile the one-step-delayed PIPELINED executable instead:
+``mix``/``step_fn(k)`` hand the step an :class:`OverlapIO` whose
+``delayed`` half applies the realization in flight at ``k`` (step k-1's)
+to the state-carried packed buffer and whose ``pack`` half emits step
+k's; keys gain the overlap phase (prime / flush), ``donate_argnums``
+rotates the double buffer in place, and ``flush_step_fn(k)`` drains the
+pipeline for checkpoints and final evaluation.
 """
 from __future__ import annotations
 
@@ -58,7 +67,44 @@ from .topology import (
 
 PyTree = Any
 
-__all__ = ["CompileCache", "GossipPlan"]
+__all__ = ["CompileCache", "GossipPlan", "OverlapIO"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapIO:
+    """Gossip I/O bundle for one overlapped (delayed-mix) step.
+
+    Handed to pipelined step functions in place of the synchronous ``mix``
+    executor: ``pack(payload)`` packs this step's pre-mix payload into the
+    in-flight wire buffers (the double buffer carried as optimizer state),
+    and ``delayed(template, bufs)`` permutes + combines the PREVIOUS
+    step's buffers with ``realization`` -- the permute reads only the
+    buffers, so XLA schedules it under the current step's compute.
+    ``realization is None`` marks the priming step (nothing in flight:
+    ``delayed`` must not be called)."""
+
+    realization: Any            # in-flight IR node (None at the prime step)
+    compression: str | None = None
+    mesh: Any = None
+    specs: Any = None
+    axis_name: str = "node"
+
+    @property
+    def prime(self) -> bool:
+        return self.realization is None
+
+    def pack(self, payload: PyTree) -> tuple:
+        return gossip.pack_payload(payload, mesh=self.mesh,
+                                   axis_name=self.axis_name,
+                                   specs=self.specs)
+
+    def delayed(self, template: PyTree, bufs) -> PyTree:
+        if self.prime:
+            raise ValueError("priming step has no in-flight payload to mix")
+        return gossip.delayed_mix(template, bufs, self.realization,
+                                  compression=self.compression,
+                                  mesh=self.mesh, axis_name=self.axis_name,
+                                  specs=self.specs)
 
 
 @dataclasses.dataclass
@@ -89,6 +135,19 @@ class GossipPlan:
     specs: Any = None
     every: int = 1
     max_compiles: int = 256
+    # Overlapped (delayed-mix) pipeline: ``step_fn(t)`` compiles the
+    # PIPELINED executable -- it mixes step t-1's in-flight payload and
+    # packs step t's -- with compile keys carrying the overlap phase
+    # ("prime" at the pipeline start, "flush" for checkpoint drains).
+    overlap: bool = False
+    # ``fn``'s argument positions whose buffers the compiled executable may
+    # reuse in place (jax.jit donate_argnums, shifted past the mix arg):
+    # the overlap pipeline donates params + optimizer state so the double
+    # buffer is rotated, not copied.
+    donate_argnums: tuple = ()
+    # ``flush_fn(io, *args)`` drains the in-flight buffer (overlap plans
+    # only); ``for_optimizer`` binds the optimizer's ``flush_pending``.
+    flush_fn: Callable | None = None
 
     def __post_init__(self):
         # LRU-bounded: periodic schedules have a tiny working set and never
@@ -109,15 +168,40 @@ class GossipPlan:
                     f"matching-structured realizations; "
                     f"{self.topology.name!r} mixes via dense matrices "
                     f"({sorted(t.__name__ for t in types)})")
+        if self.overlap:
+            types = self.topology.realization_types()
+            # a time-varying Dense stream compiles through ONE traced-W
+            # executable, but OverlapIO closes over a static realization;
+            # caching the pipelined executable under a shared "dense" key
+            # would freeze the first W.  The overlap pipeline targets the
+            # one-permute wire path anyway.
+            if Dense in types and not isinstance(self.topology.schedule,
+                                                 Static):
+                raise ValueError(
+                    f"overlap=True supports Shifts/Matching/Identity (and "
+                    f"static Dense) realizations; {self.topology.name!r} "
+                    "realizes time-varying dense matrices -- use a "
+                    "permute-structured family (one_peer_exp, ceca, "
+                    "base_k(k=1), random_match)")
 
     @classmethod
     def for_optimizer(cls, opt, fn: Callable | None = None,
-                      mesh=None, specs=None) -> "GossipPlan":
+                      mesh=None, specs=None,
+                      donate_argnums: tuple = ()) -> "GossipPlan":
         """Plan matching a chain-built optimizer's topology, warm-up phase,
-        wire compression, and communication interval."""
+        wire compression, communication interval, and overlap pipeline
+        (whose flush executor is bound to the optimizer's
+        ``flush_pending``)."""
+        overlap = bool(getattr(opt, "overlap", False))
+        flush_fn = None
+        if overlap:
+            def flush_fn(io, params, state):
+                return opt.flush_pending(params, state, io)
         return cls(opt.topology, warmup_steps=opt.warmup_steps,
                    compression=opt.compression, fn=fn, mesh=mesh,
-                   specs=specs, every=getattr(opt, "gossip_every", 1))
+                   specs=specs, every=getattr(opt, "gossip_every", 1),
+                   overlap=overlap, donate_argnums=tuple(donate_argnums),
+                   flush_fn=flush_fn)
 
     def bind(self, fn: Callable) -> "GossipPlan":
         """Same plan parameters with ``fn`` bound (fresh compile cache)."""
@@ -149,8 +233,23 @@ class GossipPlan:
         return "mixed" if Dense in types else "shifts+matching"
 
     def realization_key(self, step: int) -> tuple:
-        """Hashable compile-cache key for ``step``'s gossip realization."""
+        """Hashable compile-cache key for ``step``'s executable.
+
+        Overlap plans key the PIPELINED executable by the in-flight
+        realization (step t mixes step t-1's payload), with the overlap
+        phase folded in: ``("overlap", "prime")`` for the pipeline's first
+        step (nothing in flight yet), ``("overlap", ...)`` thereafter --
+        a primed and an un-primed executable compute different things and
+        carry different state structures, so they may never be confused."""
         k = int(step)
+        if self.overlap:
+            if k == 0:
+                return ("overlap", "prime")
+            return ("overlap",) + self._key_for(k - 1)
+        return self._key_for(k)
+
+    def _key_for(self, k: int) -> tuple:
+        """Phase/realization key ignoring the overlap pipelining shift."""
         if self.warmup_steps and k < self.warmup_steps:
             return ("warmup",)
         r = self.realization(k)
@@ -170,20 +269,42 @@ class GossipPlan:
 
     # -- executors ------------------------------------------------------------
 
-    def mix(self, step: int) -> Callable[[PyTree], PyTree]:
+    def mix(self, step: int):
         """The bare gossip executor for ``step``'s realization (static:
-        every schedule decision is resolved here, outside any trace)."""
+        every schedule decision is resolved here, outside any trace).
+        Overlap plans return the step's :class:`OverlapIO` bundle instead
+        of a plain callable -- same slot, pipelined contract."""
+        if self.overlap:
+            return self.overlap_io(step)
         k = int(step)
+        mesh, specs = self.mesh, self.specs
         if self.warmup_steps and k < self.warmup_steps:
             top_full = full_averaging(self.topology.n)
-            return lambda t: gossip.mix(t, top_full, 0)
+            return lambda t: gossip.mix(t, top_full, 0, mesh=mesh,
+                                        specs=specs)
         r = self.realization(k)
         if isinstance(r, Dense):
-            W = jnp.asarray(r.W, jnp.float32)
-            return lambda t: gossip.mix_dense(t, W)
-        comp, mesh, specs = self.compression, self.mesh, self.specs
+            return lambda t: gossip.mix_dense(t, r.W, mesh=mesh,
+                                              specs=specs)
+        comp = self.compression
         return lambda t: gossip.mix_realization(t, r, compression=comp,
                                                 mesh=mesh, specs=specs)
+
+    def overlap_io(self, step: int) -> "OverlapIO":
+        """The :class:`OverlapIO` bundle for pipelined step ``step``: its
+        ``delayed`` half applies the realization IN FLIGHT at that step
+        (step - 1's, through the warm-up and ``every=k`` phases; ``None``
+        at the priming step 0)."""
+        k = int(step) - 1
+        if k < 0:
+            return OverlapIO(None, None, self.mesh, self.specs)
+        if self.warmup_steps and k < self.warmup_steps:
+            # exact-averaging warm-up rounds intentionally skip wire
+            # compression, like the synchronous warm-up executor
+            r = full_averaging(self.topology.n).realization(0)
+            return OverlapIO(r, None, self.mesh, self.specs)
+        return OverlapIO(self.realization(k), self.compression,
+                         self.mesh, self.specs)
 
     def _dense_executable(self):
         """The time-varying dense regime's single jitted fn, taking the
@@ -196,12 +317,31 @@ class GossipPlan:
         return jnp.asarray(self.realization(int(step)).dense(self.topology.n),
                            jnp.float32)
 
-    def step_fn(self, step: int) -> Callable:
+    def step_fn(self, step: int, *, prime: bool = False) -> Callable:
         """Compiled ``fn`` for ``step``'s realization.
 
         Same realization -> the SAME executable (compiled once); the
         time-varying dense regime returns a per-step wrapper feeding the
-        realized ``W^{(k)}`` into one shared traced-``W`` executable."""
+        realized ``W^{(k)}`` into one shared traced-``W`` executable.
+
+        Overlap plans compile the PIPELINED executable: it applies step
+        ``step - 1``'s realization to the in-flight buffer and packs this
+        step's payload (with ``donate_argnums`` the state's double buffer
+        is rotated in place, never copied).  ``prime=True`` forces the
+        priming executable at ``step > 0`` -- the re-entry step after
+        resuming from a FLUSHED checkpoint, whose state carries no
+        in-flight buffer."""
+        if self.overlap:
+            fn = self._require_fn()
+            if prime or int(step) == 0:
+                key: tuple = ("overlap", "prime")
+                io = OverlapIO(None, None, self.mesh, self.specs)
+            else:
+                key = self.realization_key(step)
+                io = self.overlap_io(step)
+            return self._cache.get(key, lambda: jax.jit(
+                lambda *a: fn(io, *a),
+                donate_argnums=self.donate_argnums))
         key = self.realization_key(step)
         if key == ("dense",):
             jitted = self._dense_executable()
@@ -210,7 +350,27 @@ class GossipPlan:
         fn = self._require_fn()
         mix = self.mix(step)
         return self._cache.get(key, lambda: jax.jit(
-            lambda *a: fn(mix, *a)))
+            lambda *a: fn(mix, *a),
+            donate_argnums=self.donate_argnums))
+
+    def flush_step_fn(self, step: int) -> Callable:
+        """Compiled drain of the overlap pipeline at python step ``step``:
+        applies the realization in flight (step - 1's) to ``flush_fn``'s
+        arguments and clears the buffer.  Pure -- checkpoint flows call it
+        on a copy of the live state (flush-on-save) or right before the
+        final evaluation.  Identity passthrough for non-overlap plans and
+        at the un-primed step 0."""
+        if not self.overlap or int(step) == 0:
+            return lambda *a: a
+        if self.flush_fn is None:
+            raise ValueError(
+                "overlap plan has no flush_fn bound; construct via "
+                "for_optimizer or pass flush_fn=...")
+        key = ("overlap", "flush") + self._key_for(int(step) - 1)
+        io = self.overlap_io(step)
+        flush = self.flush_fn
+        return self._cache.get(key, lambda: jax.jit(
+            lambda *a: flush(io, *a)))
 
     def lowered(self, step: int, *args):
         """``jax.jit(...).lower(*args)`` for ``step``'s executable -- for

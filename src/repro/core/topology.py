@@ -572,18 +572,25 @@ def one_peer_hypercube(n: int) -> Topology:
                     realizations=reals, schedule=Cyclic(len(reals)))
 
 
-def bipartite_random_match(n: int, seed: int = 0) -> Topology:
+def bipartite_random_match(n: int, seed: int = 0,
+                           pool: int | None = None) -> Topology:
     """Bipartite random match graph (App. A.3.1): random perfect matching per
     step; matched pairs average (w=1/2 each). Requires even n.
 
     An :class:`Aperiodic` schedule drawing a fresh :class:`Matching` per
     step -- stateless, seeded by ``(seed, k)``: reproducible AND O(1)
-    memory over arbitrarily long runs."""
+    memory over arbitrarily long runs.
+
+    ``pool=k`` draws each step's matching (uniformly, seeded) from a
+    finite pre-seeded pool of ``k`` distinct matchings instead of the full
+    ``(n-1)!!`` space: the realization SET is finite, so
+    :class:`repro.core.plan.GossipPlan`'s compile cache CONVERGES at
+    <= ``k`` executables instead of retracing a fresh pairing every step
+    for the whole run -- the production configuration for long runs."""
     if n % 2:
         raise ValueError("bipartite_random_match requires even n")
 
-    def draw(k: int) -> Realization:
-        rng = np.random.default_rng((seed, k))
+    def draw_matching(rng) -> Realization:
         perm = rng.permutation(n)
         partner = np.empty(n, dtype=np.int64)
         for j in range(n // 2):
@@ -591,8 +598,31 @@ def bipartite_random_match(n: int, seed: int = 0) -> Topology:
             partner[a], partner[b] = b, a
         return Matching(tuple(partner), 0.5)
 
+    if pool is None:
+        def draw(k: int) -> Realization:
+            return draw_matching(np.random.default_rng((seed, k)))
+
+        return Topology("random_match", n, max_degree=1,
+                        schedule=Aperiodic(draw))
+
+    if pool < 1:
+        raise ValueError(f"random_match pool must be >= 1, got {pool}")
+    matchings: list = []
+    rng0 = np.random.default_rng((seed, 0x9E3779B9))
+    for _ in range(100 * pool):    # distinct entries; tiny n has only
+        if len(matchings) == pool:  # (n-1)!! matchings, so cap the retries
+            break
+        m = draw_matching(rng0)
+        if m not in matchings:
+            matchings.append(m)
+    size = len(matchings)
+
+    def draw(k: int) -> Realization:
+        idx = int(np.random.default_rng((seed, k)).integers(size))
+        return matchings[idx]
+
     return Topology("random_match", n, max_degree=1,
-                    schedule=Aperiodic(draw))
+                    realizations=tuple(matchings), schedule=Aperiodic(draw))
 
 
 def _factorize(n: int, kmax: int) -> list[int]:

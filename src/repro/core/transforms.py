@@ -24,6 +24,10 @@ Core transforms:
   pytree, so they pack into one flat buffer per dtype group
   (:mod:`repro.core.flatbuf`): DmSGD's fused ``(beta m + g, x - gamma m)``
   single-collective payload falls out of composition, not hand-fusion.
+  ``overlap=True`` selects the one-step-DELAYED mix: the payload rides the
+  optimizer state as a packed double buffer whose permute is issued at the
+  top of the NEXT step (hidden under that step's backward) -- see
+  :meth:`DecentralizedOptimizer.update_pipelined`.
 * :func:`quantize_int8` -- declarative marker: gossip payloads are int8
   quantized on the wire (QSGD-style, per-leaf-segment scales).
 * :func:`allreduce_warmup` -- wrapping combinator (Corollary 3): the first
@@ -74,10 +78,16 @@ __all__ = [
 class OptState(NamedTuple):
     """Optimizer state.  ``momentum`` holds the single state slot's pytree
     for one-slot chains (every SGD-family optimizer), or a ``{slot: pytree}``
-    dict for multi-slot chains (d_adamw's first/second moments)."""
+    dict for multi-slot chains (d_adamw's first/second moments).
+
+    ``buf`` is the overlapped pipeline's in-flight gossip payload: the
+    packed flat buffer(s) of the PREVIOUS step's pre-mix payload, whose
+    permute+combine is applied one step late (``None`` for synchronous
+    optimizers and before the pipeline's first -- priming -- step)."""
 
     momentum: PyTree
     count: jax.Array   # scalar int32 step counter
+    buf: Any = None    # in-flight packed payload (overlap pipeline only)
 
 
 @dataclasses.dataclass
@@ -106,9 +116,12 @@ class Transform:
     apply: Callable[[Context], None] | None = None
     tag: str | None = None
     # declarative gossip metadata (set by :func:`gossip`): which tensors
-    # are mixed, and how often (every=k -> Identity realization off-steps)
+    # are mixed, how often (every=k -> Identity realization off-steps),
+    # and whether the mix is overlapped (applied one step late so the
+    # permute hides under the next step's backward)
     where: tuple = ()
     every: int = 1
+    overlap: bool = False
 
 
 def _f32(x):
@@ -160,7 +173,8 @@ def scale_by_lr(momentum: str = "m", *, out: str = "x_next") -> Transform:
     return Transform(f"scale_by_lr({momentum})", (), None, apply)
 
 
-def gossip(where: tuple = ("x_next",), every: int = 1) -> Transform:
+def gossip(where: tuple = ("x_next",), every: int = 1,
+           overlap: bool = False) -> Transform:
     """Partially average the named tensors with this step's ``W^{(k)}``.
 
     All tensors in one ``where`` tuple are mixed as a SINGLE pytree, so the
@@ -172,7 +186,20 @@ def gossip(where: tuple = ("x_next",), every: int = 1) -> Transform:
     off-steps realize as the ``Identity`` IR node -- ZERO wire bytes, one
     shared compiled executable -- and the topology's schedule advances one
     realization per *communicating* step (so e.g. one-peer exponential
-    still exactly averages after tau communications, Lemma 1)."""
+    still exactly averages after tau communications, Lemma 1).
+
+    ``overlap=True`` selects one-step-DELAYED mixing (the standard overlap
+    formulation): step t's payload rides the optimizer state as a packed
+    flat buffer, its ``lax.ppermute`` is issued at the top of step t+1 --
+    with no data dependency on that step's forward/backward, so XLA hides
+    it under the next microbatch's compute -- and the weighted combine
+    lands one step late.  Gradients are evaluated at the pre-mix iterate
+    (the delayed-mix recursion); every ``where`` name must be ``x_next``
+    or ``<slot>_next`` so the mixed values substitute the committed
+    inputs, and no transform may run after the gossip (checked at
+    :func:`chain` time).  Drive overlapped optimizers through
+    :class:`repro.core.plan.GossipPlan`, which owns the priming step, the
+    phase-keyed compiles, and checkpoint flushes."""
     where = tuple(where)
     if every < 1:
         raise ValueError(f"gossip(every=...) needs every >= 1, got {every}")
@@ -185,8 +212,10 @@ def gossip(where: tuple = ("x_next",), every: int = 1) -> Transform:
         for k, v in zip(where, mixed):
             ctx.tensors[k] = v
 
-    name = f"gossip{where}" + (f"@every{every}" if every > 1 else "")
-    return Transform(name, (), None, apply, where=where, every=every)
+    name = f"gossip{where}" + (f"@every{every}" if every > 1 else "") \
+        + ("@overlap" if overlap else "")
+    return Transform(name, (), None, apply, where=where, every=every,
+                     overlap=overlap)
 
 
 
@@ -336,6 +365,47 @@ class DecentralizedOptimizer:
         return tuple(names)
 
     @property
+    def overlap(self) -> bool:
+        """True when the chain's gossip is one-step-delayed (overlapped).
+
+        Validates the structural requirements of the delayed-mix recursion:
+        ONE gossip transform (a second payload would need a second in-flight
+        buffer and realization), nothing applied after it (a post-gossip
+        transform -- e.g. quasi-global momentum -- reads the mixed values in
+        the SAME step, which the pipeline only produces one step later),
+        and every mixed name must be ``x_next`` or ``<slot>_next`` so the
+        combine's output substitutes the committed inputs."""
+        gossips = [t for t in self.transforms if t.where]
+        flags = {t.overlap for t in gossips}
+        if len(flags) > 1:
+            raise ValueError(
+                f"chain {self.name!r} mixes overlapped and synchronous "
+                "gossip transforms; one chain carries one pipeline")
+        if not flags or not flags.pop():
+            return False
+        if len(gossips) > 1:
+            raise ValueError(
+                f"chain {self.name!r} has {len(gossips)} gossip transforms; "
+                "overlap=True supports exactly one (one in-flight payload)")
+        after = self.transforms[self.transforms.index(gossips[0]) + 1:]
+        trailing = [t.name for t in after if t.apply is not None]
+        if trailing:
+            raise ValueError(
+                f"chain {self.name!r} applies {trailing} AFTER the "
+                "overlapped gossip; delayed mixing produces the mixed "
+                "values one step late, so nothing in the same step may "
+                "consume them (use overlap=False)")
+        slots = self.slot_names
+        for w in gossips[0].where:
+            if w != "x_next" and not (w.endswith("_next")
+                                      and w[:-5] in slots):
+                raise ValueError(
+                    f"overlapped gossip mixes {w!r}, which is neither "
+                    "'x_next' nor a declared state slot's '<slot>_next'; "
+                    "the delayed combine must land on committed state")
+        return True
+
+    @property
     def slot_names(self) -> tuple:
         names: list = []
         for t in self.transforms:
@@ -352,11 +422,11 @@ class DecentralizedOptimizer:
             return {names[0]: state.momentum}
         return dict(state.momentum)
 
-    def _state_of(self, slots: dict, count) -> OptState:
+    def _state_of(self, slots: dict, count, buf=None) -> OptState:
         names = self.slot_names
         if len(names) == 1:
-            return OptState(slots[names[0]], count)
-        return OptState({k: slots[k] for k in names}, count)
+            return OptState(slots[names[0]], count, buf)
+        return OptState({k: slots[k] for k in names}, count, buf)
 
     # -- public API -----------------------------------------------------------
 
@@ -392,8 +462,111 @@ class DecentralizedOptimizer:
     def update(self, params: PyTree, state: OptState, grads: PyTree,
                step, lr) -> tuple[PyTree, OptState]:
         """One step; the gossip realization is resolved from ``step``."""
+        if self.overlap:
+            if not isinstance(step, (int, np.integer)):
+                raise ValueError(
+                    "overlapped gossip needs static-int steps (the "
+                    "in-flight realization is a compile-time property); "
+                    "drive it through GossipPlan or pass python-int steps")
+            from .plan import GossipPlan
+            io = GossipPlan.for_optimizer(self).overlap_io(int(step))
+            return self.update_pipelined(params, state, grads, lr, io)
         return self.update_with_mix(params, state, grads, lr,
                                     self.mix_for_step(step))
+
+    # -- overlapped (delayed-mix) pipeline ------------------------------------
+
+    def _overlap_names(self) -> tuple:
+        """The (single) overlapped gossip transform's ``where`` tuple."""
+        return next(t for t in self.transforms if t.where).where
+
+    def _payload_template(self, params: PyTree, slots: dict):
+        """ShapeDtypeStructs of the f32 wire payload (same structure the
+        synchronous gossip would mix: a bare tree for one name, a tuple
+        otherwise) -- what :func:`repro.core.gossip.delayed_mix` unpacks
+        the in-flight buffers against."""
+
+        def f32_like(t):
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+
+        names = self._overlap_names()
+        parts = tuple(f32_like(params if w == "x_next" else slots[w[:-5]])
+                      for w in names)
+        return parts[0] if len(parts) == 1 else parts
+
+    def update_pipelined(self, params: PyTree, state: OptState,
+                         grads: PyTree, lr, io) -> tuple[PyTree, OptState]:
+        """One overlapped step of the one-step-delayed-mix recursion.
+
+        ``io`` is the plan-resolved gossip I/O pair
+        (:class:`repro.core.plan.OverlapIO`): ``io.delayed`` permutes and
+        combines the IN-FLIGHT payload (``state.buf``) with the PREVIOUS
+        step's realization, ``io.pack`` packs this step's payload as the
+        new in-flight buffer.  The permute reads only ``state.buf``, so it
+        carries no data dependency on this step's forward/backward --
+        that independence is what lets XLA's latency-hiding scheduler run
+        the collective under the next microbatch's compute.
+
+        ``grads`` are evaluated at the PRE-mix params (the delayed
+        recursion's convention); the local transforms then run on the
+        freshly mixed iterates.  When ``state.buf`` is None (step 0, or a
+        re-prime after a flushed checkpoint restore), the step is purely
+        local: no mix, just payload production."""
+        slots = self._slots_of(state)
+        tensors = dict(slots)
+        tensors["x"] = params
+        tensors["g"] = grads
+        if state.buf is not None:
+            mixed = io.delayed(self._payload_template(params, slots),
+                               state.buf)
+            names = self._overlap_names()
+            vals = (mixed,) if len(names) == 1 else tuple(mixed)
+            for w, v in zip(names, vals):
+                tgt = "x" if w == "x_next" else w[:-5]
+                ref = params if tgt == "x" else slots[tgt]
+                tensors[tgt] = jax.tree.map(
+                    lambda a, b: a.astype(b.dtype), v, ref)
+        ctx = Context(tensors=tensors, lr=lr, count=state.count, mix=None)
+        for t in self.transforms:
+            if t.apply is not None and not t.where:   # gossip applies skip
+                t.apply(ctx)
+        payload = tuple(jax.tree.map(_f32, tensors[w])
+                        for w in self._overlap_names())
+        buf = io.pack(payload[0] if len(payload) == 1 else payload)
+        new_params = jax.tree.map(lambda a, b: a.astype(b.dtype),
+                                  tensors["x_next"], params)
+        new_slots = {
+            s: jax.tree.map(lambda a, b: a.astype(b.dtype),
+                            tensors[s + "_next"], slots[s])
+            for s in self.slot_names}
+        return new_params, self._state_of(new_slots, state.count + 1, buf)
+
+    def flush_pending(self, params: PyTree, state: OptState, io
+                      ) -> tuple[PyTree, OptState]:
+        """Apply the pipeline's pending in-flight mix and clear the buffer.
+
+        The returned state (``buf=None``) holds the fully mixed iterates --
+        what the synchronous recursion would have produced for the last
+        completed step.  Pure: the live pipeline can keep training from
+        the un-flushed state (flush-on-save checkpoints), or training can
+        resume from the flushed state with a re-priming step."""
+        if state.buf is None:
+            return params, state
+        slots = self._slots_of(state)
+        mixed = io.delayed(self._payload_template(params, slots), state.buf)
+        names = self._overlap_names()
+        vals = (mixed,) if len(names) == 1 else tuple(mixed)
+        new_params, new_slots = params, dict(slots)
+        for w, v in zip(names, vals):
+            if w == "x_next":
+                new_params = jax.tree.map(
+                    lambda a, b: a.astype(b.dtype), v, params)
+            else:
+                s = w[:-5]
+                new_slots[s] = jax.tree.map(
+                    lambda a, b: a.astype(b.dtype), v, slots[s])
+        return new_params, self._state_of(new_slots, state.count, None)
 
     def mix_for_step(self, step) -> Callable[[PyTree], PyTree]:
         """Default executor resolution.  Static int steps delegate to
@@ -428,6 +601,7 @@ def chain(*transforms, topology: Topology, name: str = "chain",
             f"chain {name!r} declares no state slots; every optimizer needs "
             "at least one (e.g. trace_momentum)")
     opt.gossip_every   # fail fast on mixed gossip(every=...) intervals
+    opt.overlap        # fail fast on an invalid overlapped composition
     return opt
 
 

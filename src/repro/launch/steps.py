@@ -143,6 +143,13 @@ def make_train_step(cfg: M.ModelConfig,
     Gradients are computed per node (vmap over the leading node axis) with
     optional microbatch accumulation, then fed to the decentralized
     optimizer -- partial averaging happens inside ``opt.update_with_mix``.
+
+    For an OVERLAPPED optimizer (``gossip(..., overlap=True)``), ``mix``
+    is the plan's :class:`repro.core.plan.OverlapIO` bundle and the step
+    is pipelined: the previous step's payload permute reads only the
+    in-flight buffer in ``opt_state.buf``, so it carries no dependency on
+    this step's forward/backward and XLA hides it under the compute;
+    gradients land on the pre-mix params (the delayed-mix recursion).
     """
 
     def per_node_grads(p, tokens, image_embeds):
@@ -179,8 +186,12 @@ def make_train_step(cfg: M.ModelConfig,
         else:
             losses, grads = jax.vmap(per_node_grads)(params, tokens,
                                                      image_embeds)
-        new_params, new_state = opt.update_with_mix(params, opt_state, grads,
-                                                    lr, mix)
+        if opt.overlap:
+            new_params, new_state = opt.update_pipelined(
+                params, opt_state, grads, lr, mix)
+        else:
+            new_params, new_state = opt.update_with_mix(
+                params, opt_state, grads, lr, mix)
         return new_params, new_state, losses.mean()
 
     return train_step

@@ -29,9 +29,11 @@ from repro.launch import steps as steps_mod
 
 def build_trainer(cfg, topology, optimizer_name: str, beta: float,
                   micro_batch=None, momentum_dtype=None, warmup_steps=0,
-                  mesh=None, payload_specs=None):
+                  mesh=None, payload_specs=None, overlap=False):
     """Returns (opt, step_for) where ``step_for(step)`` is the compiled
-    train-step callable for that step's gossip realization.
+    train-step callable for that step's gossip realization (the plan
+    itself rides along as ``step_for.plan`` -- checkpoint flushes and
+    introspection go through it).
 
     All schedule handling (realization-IR classification -- Shifts /
     Matching / Dense / Identity -- warm-up phase keying, realization-keyed
@@ -44,9 +46,16 @@ def build_trainer(cfg, topology, optimizer_name: str, beta: float,
     the full ("node", "fsdp", "model") logical mesh reuses the parameter
     placement rules (:func:`repro.launch.sharding.gossip_payload_spec_fn`)
     so inner-dim shardings pass through the gossip untouched.
+
+    ``overlap=True`` builds the one-step-delayed pipelined trainer: the
+    gossip permute for step t's payload is issued at the top of step t+1
+    (hidden under that step's backward), the packed payload rides the
+    optimizer state as a double buffer, and params + state are DONATED to
+    the executable so the buffer rotates in place instead of being copied.
     """
     opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta,
-                                   momentum_dtype=momentum_dtype)
+                                   momentum_dtype=momentum_dtype,
+                                   overlap=overlap)
     if warmup_steps:
         from repro.core.transforms import allreduce_warmup
         opt = allreduce_warmup(warmup_steps)(opt)
@@ -58,8 +67,14 @@ def build_trainer(cfg, topology, optimizer_name: str, beta: float,
         payload_specs = sharding_mod.gossip_payload_spec_fn(mesh)
     step_fn = steps_mod.make_train_step(cfg, opt, micro_batch=micro_batch)
     plan = GossipPlan.for_optimizer(opt, fn=step_fn, mesh=mesh,
-                                    specs=payload_specs)
-    return opt, plan.step_fn
+                                    specs=payload_specs,
+                                    donate_argnums=(0, 1) if overlap else ())
+
+    def step_for(step, **kw):
+        return plan.step_fn(step, **kw)
+
+    step_for.plan = plan
+    return opt, step_for
 
 
 @jax.jit
@@ -96,8 +111,11 @@ def run(args) -> dict:
     layout = configs.get_layout(args.arch)
     mom_dtype = {"bfloat16": jnp.bfloat16,
                  "float32": jnp.float32}.get(layout.get("momentum_dtype"))
+    overlap = getattr(args, "overlap", False)
     opt, step_for = build_trainer(cfg, top, args.optimizer, args.beta,
-                                  args.micro_batch, momentum_dtype=mom_dtype)
+                                  args.micro_batch, momentum_dtype=mom_dtype,
+                                  overlap=overlap)
+    plan = step_for.plan
 
     from repro.models import model as M
     params = M.init(cfg, jax.random.key(args.seed))
@@ -128,15 +146,31 @@ def run(args) -> dict:
         lr = lr_fn(step)
         stacked, state, loss = step_for(step)(stacked, state, batch, lr)
         if step % args.log_every == 0 or step == args.steps - 1:
-            cd = consensus_distance(stacked)
+            # the pipelined iterate is pre-mix; metrics read the FLUSHED
+            # view (what the synchronous recursion would hold) without
+            # disturbing the live buffer -- flush is pure
+            ev_params, _ = plan.flush_step_fn(step + 1)(stacked, state)
+            cd = consensus_distance(ev_params)
             history.append(dict(step=step, loss=float(loss), consensus=cd,
                                 lr=float(lr)))
             print(f"step {step:5d}  loss {float(loss):.4f}  "
                   f"consensus {cd:.3e}  lr {float(lr):.2e}  "
                   f"({time.time() - t0:.1f}s)")
         if args.ckpt_dir and step and step % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt_dir, step,
-                            {"params": stacked, "momentum": state.momentum})
+            if overlap and getattr(args, "ckpt_flush", False):
+                # flush-on-save: persist the mixed iterates, no buffer;
+                # resume re-primes the pipeline (step_for(k, prime=True))
+                fp, fs = plan.flush_step_fn(step + 1)(stacked, state)
+                payload = {"params": fp, "momentum": fs.momentum}
+            else:
+                # carry-buffer: the in-flight payload checkpoints with the
+                # state, so resume is bit-identical to never stopping
+                payload = {"params": stacked, "momentum": state.momentum}
+                if state.buf is not None:
+                    payload["gossip_buf"] = state.buf
+            checkpoint.save(args.ckpt_dir, step, payload)
+    if overlap:
+        stacked, state = plan.flush_step_fn(args.steps)(stacked, state)
     return {"history": history, "params": stacked, "state": state,
             "config": cfg}
 
@@ -152,6 +186,14 @@ def main() -> None:
                     help="gossip graph; base_k/ceca are the finite-time "
                          "families (Takezawa 23 / cf. Ding 23)")
     ap.add_argument("--optimizer", default="dmsgd")
+    ap.add_argument("--overlap", action="store_true",
+                    help="one-step-delayed (overlapped) gossip: the permute "
+                         "for step t's payload is issued at the top of step "
+                         "t+1 and hides under that step's backward")
+    ap.add_argument("--ckpt-flush", action="store_true",
+                    help="flush the in-flight overlap buffer into the "
+                         "checkpoint (smaller artifact, resume re-primes) "
+                         "instead of carrying it (bit-identical resume)")
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=4, help="per-node batch")

@@ -86,6 +86,23 @@ def test_plan_aperiodic_matching_cache_is_lru_bounded(n=8):
     assert plan.num_compiled <= 4
 
 
+def test_plan_pooled_matching_compiles_plateau(n=8):
+    """random_match(pool=k) draws every step's pairing from the pre-seeded
+    pool, so the compile count PLATEAUS at <= pool size (the LRU bound
+    never evicts, no per-step retrace cost) -- the ROADMAP's long-run fix
+    for the aperiodic retrace cost."""
+    top = topology.bipartite_random_match(n, seed=0, pool=3)
+    plan = GossipPlan(top, fn=lambda mix, t: mix(t))
+    tree = {"x": jnp.zeros((n, 4))}
+    for k in range(50):
+        plan.step_fn(k)(tree)
+    assert plan.num_compiled <= 3
+    compiled_at_50 = plan.num_compiled
+    for k in range(50, 120):
+        plan.step_fn(k)(tree)
+    assert plan.num_compiled == compiled_at_50   # converged, no retraces
+
+
 def test_chain_rejects_mixed_gossip_every(n=8):
     """Two gossip() transforms with different every= would share one
     realization per step, silently skipping the every=1 one on off-steps

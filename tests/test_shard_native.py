@@ -214,6 +214,30 @@ _HLO_2AX_SCRIPT = textwrap.dedent("""
     assert c.get("collective-permute", 0) == spec["collectives_per_step"] \\
         == 4, (c, spec)
     assert c.get("all-gather", 0) == 0, c
+
+    # Dense realizations route through shard_map too: grid's W has 4
+    # nonzero circulant distance classes at n=4 ({1, 2, 3} after merging)
+    # -> explicit-pairs permutes per dtype group and ZERO added reshards
+    # (the old route einsum'd the packed buffer = an all-gather + the
+    # payload reshard on this mesh)
+    gridW = topology.grid_2d(nodes).realization(0)
+    cost = counts(lambda t: gossip.mix_realization(
+        t, gridW, mesh=mesh, specs=specs))
+    c = cost.collective_counts
+    assert c.get("all-gather", 0) == 0, c
+    assert c.get("all-to-all", 0) == 0, c
+    assert c.get("all-reduce", 0) == 0, c
+    assert 0 < c.get("collective-permute", 0) <= 2 * (nodes - 1), c
+
+    # exact averaging (uniform rows) collapses to ONE psum per group:
+    # all-reduce only, no permutes, no gathers
+    fullW = topology.full_averaging(nodes).realization(0)
+    cost = counts(lambda t: gossip.mix_realization(
+        t, fullW, mesh=mesh, specs=specs))
+    c = cost.collective_counts
+    assert c.get("all-reduce", 0) == 2, c          # f32 + bf16 group
+    assert c.get("all-gather", 0) == 0, c
+    assert c.get("collective-permute", 0) == 0, c
     print("HLO-2AX-OK")
 """)
 
@@ -341,6 +365,37 @@ _PARITY_SCRIPT = textwrap.dedent("""
     eq(kernel_outs[0], gossip.mix_shifts(tree, r.self_w, list(r.shifts)))
     eq(kernel_outs[1], gossip.mix_matching(tree, m.partner, 0.5))
     eq(kernel_outs[2], gossip.mix_matching(tree, m.partner, 0.5, "int8"))
+
+    # dense shard-native (permute route + psum route) vs the global
+    # einsum: allclose, not bit-equal -- the summation ORDER differs (and
+    # a 1-ulp f32 difference can round across a bf16 boundary at commit)
+    def close(a, b):
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            tol = 1e-2 if x.dtype == jnp.bfloat16 else 1e-5
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       rtol=tol, atol=tol * 1e-1)
+
+    for topname in ("grid", "full"):
+        W = topology.get_topology(topname, nodes).realization(0).dense(nodes)
+        close(gossip.mix_dense(tree_s, W, mesh=mesh, specs=specs),
+              gossip.mix_dense(tree, W))
+
+    # the delayed (overlapped) halves: pack_payload -> delayed_mix on the
+    # 2-axis mesh is bit-identical to the synchronous shard-native mix
+    gossip.set_pallas_mode("off")
+    for real in (r, m, topology.Identity(),
+                 topology.Dense(topology.grid_2d(nodes).realization(0)
+                                .dense(nodes))):
+        bufs = gossip.pack_payload(tree_s, mesh=mesh, specs=specs)
+        eq(gossip.delayed_mix(tree_s, bufs, real, mesh=mesh, specs=specs),
+           gossip.mix_realization(tree_s, real, mesh=mesh, specs=specs))
+    bufs = gossip.pack_payload(tree_s, mesh=mesh, specs=specs)
+    eq(gossip.delayed_mix(tree_s, bufs, m, compression="int8", mesh=mesh,
+                          specs=specs),
+       gossip.mix_realization(tree_s, m, compression="int8", mesh=mesh,
+                              specs=specs))
+    gossip.set_pallas_mode("auto")
     # ... and fixed points survived int8 bit-exactly on the sharded path
     for k in tree:
         np.testing.assert_array_equal(

@@ -58,3 +58,21 @@ def test_train_optimizer_variants_run():
     for opt in ("dsgd", "vanilla_dmsgd", "qg_dmsgd", "parallel_msgd"):
         out = train_mod.run(_args(steps=6, optimizer=opt, log_every=5))
         assert np.isfinite(out["history"][-1]["loss"])
+
+
+def test_train_overlap_end_to_end(tmp_path):
+    """--overlap through the full driver: pipelined steps train, the
+    in-flight buffer rides the checkpoints (carry-buffer mode), and the
+    returned iterates are flushed (buf drained)."""
+    ck = str(tmp_path / "ck")
+    out = train_mod.run(_args(steps=11, overlap=True, ckpt_dir=ck,
+                              ckpt_every=5, log_every=5))
+    assert np.isfinite(out["history"][-1]["loss"])
+    assert out["state"].buf is None          # final flush drained it
+    step = checkpoint.latest_step(ck)
+    assert step == 10
+    # the carry-buffer checkpoint persisted the live in-flight payload
+    import json, os
+    with open(os.path.join(ck, f"step_{step}", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert "'gossip_buf'" in manifest["treedef"]

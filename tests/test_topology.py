@@ -206,6 +206,28 @@ def test_random_match_doubly_stochastic_and_asymptotic(n=16):
     assert res[-1] < 1e-6
 
 
+def test_random_match_pool_draws_from_finite_seeded_set(n=16):
+    """random_match(pool=k): the realization SET is a pre-seeded pool of k
+    distinct matchings (so downstream compile caches converge), draws are
+    deterministic in (seed, step), and mixing still contracts consensus."""
+    top = topology.bipartite_random_match(n, seed=1, pool=4)
+    assert top.realizations is not None and len(top.realizations) == 4
+    assert len({top.realization(k) for k in range(100)}) <= 4
+    assert all(top.realization(k) in top.realizations for k in range(20))
+    for k in range(5):
+        assert _is_doubly_stochastic(top.weights(k))
+    # same (seed, pool) -> the same stream; different seed -> another pool
+    again = topology.bipartite_random_match(n, seed=1, pool=4)
+    assert all(again.realization(k) == top.realization(k)
+               for k in range(30))
+    other = topology.bipartite_random_match(n, seed=2, pool=4)
+    assert other.realizations != top.realizations
+    res = spectral.consensus_residue_products(top, steps=300, seed=5)
+    assert res[-1] < 1e-3
+    # tiny n: only (n-1)!! distinct matchings exist -- the pool caps there
+    assert len(topology.bipartite_random_match(4, pool=10).realizations) == 3
+
+
 # ---------------------------------------------------------------------------
 # Table 5 orderings
 # ---------------------------------------------------------------------------
