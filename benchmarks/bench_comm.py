@@ -122,6 +122,35 @@ def two_axis_rows(n: int = 16, fsdp: int = 8) -> list[dict]:
     return rows
 
 
+def runtime_rows(n: int = 16) -> list[dict]:
+    """Wire accounting for RUNTIME-VALUED rounds: the piggybacked metadata
+    columns (loss / grad-norm / deadline flag) ride the f32 group's
+    existing permute -- zero extra collectives; ``gossip_spec`` reports
+    their bytes as a separate split (like the int8 scale rows) so the
+    regression gate sees the new bytes honestly.  ``bytes_per_iter`` is
+    payload x2 (x + momentum share one buffer) + the meta columns ONCE
+    (one permute per round carries them, however many trees pack in)."""
+    tree = {"w": jnp.zeros((n, 250_000, 4), jnp.float32)}  # 1M f32 per node
+    layout = flatbuf.layout_of(tree)
+    rows = []
+    for name, cols, tag in [("one_peer_exp", 1, "loss_aware"),
+                            ("one_peer_exp", 2, "loss_aware+deadline"),
+                            ("one_peer_hypercube", 2,
+                             "loss_aware+deadline")]:
+        top = topology.get_topology(name, n)
+        spec = gossip.gossip_spec(top, 0, layout=layout, meta_cols=cols)
+        payload = (spec["bytes_per_node_per_step"]
+                   - spec["meta_bytes_per_node_per_step"])
+        rows.append(dict(
+            topology=f"{name}@{tag}", n=n, kind=spec["kind"],
+            meta_cols=cols,
+            collectives_per_step=spec["collectives_per_step"],
+            meta_bytes_per_iter=spec["meta_bytes_per_node_per_step"],
+            bytes_per_iter=(payload * 2
+                            + spec["meta_bytes_per_node_per_step"])))
+    return rows
+
+
 def run(n: int = 16) -> None:
     for r in comm_table(n):
         emit(f"comm_{r['topology']}", r["us_per_mix"],
@@ -154,6 +183,7 @@ def run_quick(out_path: str = "BENCH_comm.json", n: int = 16) -> None:
     rows = comm_table(n, time_mix=True)
     rec = {"n": n, "rows": rows,
            "two_axis": {"fsdp": 8, "rows": two_axis_rows(n, fsdp=8)},
+           "runtime": {"rows": runtime_rows(n)},
            "overlap": overlap_section()}
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)
@@ -165,6 +195,12 @@ def run_quick(out_path: str = "BENCH_comm.json", n: int = 16) -> None:
         emit(f"comm_2ax_{r['topology']}", 0.0,
              f"fsdp={r['fsdp']};"
              f"bytes_per_iter_per_shard={r['bytes_per_iter_per_shard']}")
+    for r in rec["runtime"]["rows"]:
+        emit(f"comm_rt_{r['topology']}", 0.0,
+             f"meta_cols={r['meta_cols']};"
+             f"collectives={r['collectives_per_step']};"
+             f"meta_bytes={r['meta_bytes_per_iter']};"
+             f"bytes_per_iter={r['bytes_per_iter']}")
     ov = rec["overlap"]
     emit("comm_overlap_pipelined", 1e3 * ov["ms_per_step_overlap"],
          f"sync_ms={ov['ms_per_step_sync']:.2f};"

@@ -16,9 +16,25 @@ design).
 Metric: steady-state mean-square error above the parallel-SGD level at the
 same constant step size (the eq.-3 b^2/(1-rho)^2 term), reported per
 topology and heterogeneity level.
+
+STRAGGLER half (``straggler_rows`` / ``--quick``): the runtime-valued
+gossip trade.  Two designated slow nodes miss each round's deadline with
+probability ``p_miss``; the synchronous baseline WAITS for them (every such
+step costs ``slow_factor`` time units), while ``deadline-skip`` closes the
+round at the deadline (1 unit) and drops the late nodes from the mixing --
+per node, both directions, surviving weights renormalized -- and
+``skip+loss`` additionally reweights edges toward better-loss neighbors
+(AL-DSGD), the losses piggybacking on the same permute.  Reported per mode:
+steady-state MSE, simulated wall-clock, and their product (the
+convergence-vs-time trade the paper's efficiency claim is about).  The
+``--quick`` mode runs a reduced grid and merges a ``hetero`` section into
+the BENCH_comm JSON artifact -- report-only, never gated (stochastic).
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
@@ -58,6 +74,100 @@ def _run(n, d, topname, b_scale, T=1500, lr=0.015, sigma=0.3, seed=0):
     return float(np.mean(tail))
 
 
+STRAGGLER_MODES = ("wait", "skip", "skip+loss")
+
+
+def _run_straggler(n, d, topname, mode, T=900, lr=0.02, sigma=0.3, seed=0,
+                   n_stragglers=2, p_miss=0.5, slow_factor=4.0):
+    """One straggler-simulation run; returns its summary row.
+
+    Homogeneous quadratics (b = 0) isolate the straggler effect from the
+    eq.-4 heterogeneity terms.  ``wait`` is the synchronous baseline (all
+    nodes mix every round, a late straggler stalls the whole step);
+    ``skip`` closes the round at the deadline via per-node gating;
+    ``skip+loss`` adds the AL-DSGD adjacent-leader weights on top."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((d, d)) * 0.3 + np.eye(d),
+                    jnp.float32)
+    yv = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    x_star = jnp.linalg.solve(A.T @ A, A.T @ yv)
+    straggler = np.zeros(n, bool)
+    straggler[:n_stragglers] = True
+
+    deadline = mode in ("skip", "skip+loss")
+    opt = optim.make_optimizer("dmsgd", topology.get_topology(topname, n),
+                               beta=0.8, deadline=deadline,
+                               loss_aware=(mode == "skip+loss"))
+    params = {"x": jnp.zeros((n, d))}
+    state = opt.init(params)
+    key = jax.random.key(seed + 1)
+    sim_time = 0.0
+    tail = []
+    for k in range(T):
+        key, sub = jax.random.split(key)
+        r = jnp.einsum("ij,nj->ni", A, params["x"]) - yv[None]
+        g = jnp.einsum("ij,ni->nj", A, r)
+        g = g + sigma * jax.random.normal(sub, g.shape)
+        late = straggler & (rng.random(n) < p_miss)
+        aux = None
+        if deadline:
+            # round closes at the deadline: one time unit, late nodes out
+            sim_time += 1.0
+            aux = {"loss": 0.5 * jnp.sum(r * r, axis=1),
+                   "alive": jnp.asarray(~late)}
+        else:
+            # synchronous gossip waits for the slowest node
+            sim_time += slow_factor if late.any() else 1.0
+        params, state = opt.update(params, state, {"x": g}, k, lr, aux=aux)
+        if k >= T - 200:
+            tail.append(float(jnp.mean(
+                jnp.sum((params["x"] - x_star[None]) ** 2, -1))))
+    mse = float(np.mean(tail))
+    return dict(mode=mode, topology=topname, n=n, n_stragglers=n_stragglers,
+                p_miss=p_miss, slow_factor=slow_factor, steps=T,
+                tail_mse=mse, sim_time=sim_time,
+                mse_x_time=mse * sim_time)
+
+
+def straggler_rows(n: int = 16, d: int = 10, topname: str = "one_peer_exp",
+                   T: int = 900) -> list[dict]:
+    """wait vs skip vs skip+loss on the same straggler stream (same seed)."""
+    return [_run_straggler(n, d, topname, mode, T=T)
+            for mode in STRAGGLER_MODES]
+
+
+def run_quick(merge_path: str | None = None, n: int = 8,
+              T: int = 600) -> None:
+    """CI smoke: 2 simulated stragglers on one_peer_exp, reduced grid.
+
+    Emits one CSV row per mode and (with ``merge_path``) records the
+    summary as a ``hetero`` section in the BENCH_comm JSON artifact --
+    REPORT-ONLY for ``check_comm_regression`` (stochastic quadratics and
+    host-dependent nothing: the section never gates)."""
+    t0 = time.perf_counter()
+    rows = straggler_rows(n=n, T=T)
+    us = 1e6 * (time.perf_counter() - t0) / len(rows)
+    by_mode = {r["mode"]: r for r in rows}
+    ok = (by_mode["skip"]["sim_time"] < by_mode["wait"]["sim_time"]
+          and by_mode["skip"]["tail_mse"]
+          < 5.0 * max(by_mode["wait"]["tail_mse"], 1e-9))
+    for r in rows:
+        emit(f"hetero_straggler_{r['mode'].replace('+', '_')}", us,
+             f"tail_mse={r['tail_mse']:.4f};sim_time={r['sim_time']:.0f};"
+             f"mse_x_time={r['mse_x_time']:.2f}")
+    emit("hetero_straggler_trade", us, f"skip_beats_wait_wallclock={ok}")
+    if merge_path:
+        rec = {}
+        if os.path.exists(merge_path):
+            with open(merge_path) as f:
+                rec = json.load(f)
+        rec["hetero"] = {"n": n, "steps": T, "rows": rows,
+                         "skip_beats_wait_wallclock": bool(ok)}
+        with open(merge_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"merged hetero section into {merge_path}")
+
+
 def run(n: int = 32, d: int = 10) -> None:
     t0 = time.perf_counter()
     rows = {}
@@ -78,3 +188,22 @@ def run(n: int = 32, d: int = 10) -> None:
          ";".join(f"b{b}_onepeer={exc[b]['one_peer_exp']:.4f};"
                   f"b{b}_ring={exc[b]['ring']:.4f}" for b in rows)
          + f";ring_degrades_faster={ok}")
+    t0 = time.perf_counter()
+    srows = straggler_rows(n=16)
+    sus = 1e6 * (time.perf_counter() - t0) / len(srows)
+    for r in srows:
+        emit(f"hetero_straggler_{r['mode'].replace('+', '_')}", sus,
+             f"tail_mse={r['tail_mse']:.4f};sim_time={r['sim_time']:.0f};"
+             f"mse_x_time={r['mse_x_time']:.2f}")
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv:
+        merge = None
+        if "--merge" in sys.argv:
+            merge = sys.argv[sys.argv.index("--merge") + 1]
+        print("name,us_per_call,derived")
+        run_quick(merge_path=merge)
+    else:
+        print("name,us_per_call,derived")
+        run()

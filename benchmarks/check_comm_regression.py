@@ -59,6 +59,24 @@ def compare(baseline: dict, new: dict, threshold: float = 0.2) -> list[str]:
           baseline.get("two_axis", {}).get("rows", []),
           new.get("two_axis", {}).get("rows", []),
           "bytes_per_iter_per_shard")
+    # runtime-valued rounds: the piggybacked metadata bytes are structural
+    # (4 bytes/col/payload-copy off the IR) -- gated like the payload, and
+    # extra collectives for the metadata are a hard zero-tolerance failure
+    # (the piggyback's whole point is riding the existing permute)
+    check("runtime",
+          baseline.get("runtime", {}).get("rows", []),
+          new.get("runtime", {}).get("rows", []),
+          "bytes_per_iter")
+    old_rt = _index(baseline.get("runtime", {}).get("rows", []))
+    for name, row in _index(new.get("runtime", {}).get("rows", [])).items():
+        base = old_rt.get(name)
+        if base and row.get("collectives_per_step", 0) \
+                > base.get("collectives_per_step", 0):
+            fails.append(
+                f"runtime/{name}: collectives_per_step "
+                f"{base['collectives_per_step']} -> "
+                f"{row['collectives_per_step']} -- metadata must ride the "
+                "existing permute, never add collectives")
     return fails
 
 
@@ -82,6 +100,16 @@ def report_timings(baseline: dict, new: dict,
         b = (old.get(name) or {}).get("us_per_mix")
         ref = f" (baseline {b:.0f})" if _num(b) else ""
         print(f"  timing comm/{name}: us_per_mix {t:.0f}{ref}")
+    het = new.get("hetero", {})
+    if het:
+        # straggler-simulation section (bench_hetero --quick --merge):
+        # stochastic quadratics, REPORT-ONLY -- prints the trade, never gates
+        for r in het.get("rows", []):
+            print(f"  hetero/{r['mode']}: tail_mse={r['tail_mse']:.4f} "
+                  f"sim_time={r['sim_time']:.0f} "
+                  f"mse_x_time={r['mse_x_time']:.2f}")
+        print(f"  hetero: skip_beats_wait_wallclock="
+              f"{het.get('skip_beats_wait_wallclock')}")
     ov, ov0 = new.get("overlap", {}), baseline.get("overlap", {})
     if ov0 and not ov:
         # the baseline records the pipelined-vs-sync pair; a fresh run

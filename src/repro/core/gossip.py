@@ -69,17 +69,19 @@ from . import flatbuf
 from .topology import (
     AperiodicScheduleError,
     Dense,
+    Gated,
     Identity,
     Matching,
     Shifts,
     Topology,
+    _is_static_value,
 )
 
 PyTree = Any
 
 __all__ = ["mix_dense", "mix_shifts", "mix_matching", "mix_realization",
-           "mix", "mix_switch", "gossip_spec", "mix_shifts_per_leaf",
-           "pack_payload", "delayed_mix",
+           "mix", "mix_switch", "mix_scheduled", "gossip_spec",
+           "mix_shifts_per_leaf", "pack_payload", "delayed_mix",
            "set_pallas_mode", "AperiodicScheduleError"]
 
 
@@ -329,6 +331,188 @@ def _shift_pairs(n: int, shift: int) -> list:
 
 
 # ---------------------------------------------------------------------------
+# Runtime-valued rounds: traced weights, metadata piggyback, node gating
+# ---------------------------------------------------------------------------
+#
+# A round is RUNTIME-valued when any of its weights is a traced jax value,
+# or when it carries per-node metadata (``meta=``), loss-aware edge weights
+# (``edge_weight=``) or a straggler gate (``node_gate=``).  The wire
+# structure stays exactly the static path's -- the same permutes are always
+# issued (a gated-off edge still moves its bytes; no collective ever sits
+# inside a ``lax.cond``) -- but the combine runs in plain jnp f32 (the
+# Pallas kernel wants static float weights) with weights that are traced
+# operands.  Metadata rides as EXTRA COLUMNS concatenated onto the f32
+# dtype group's packed buffer before its permute: the receiver learns the
+# sender's (loss, grad-norm, deadline) row through the collective it was
+# already paying for -- zero additional collectives, ``4 * meta_cols``
+# extra bytes per payload copy (counted by :func:`gossip_spec`).
+#
+# Weight semantics: ``edge_weight(own_meta, recv_meta, base_w) -> w`` gives
+# the RECEIVING node's weight for that edge (elementwise over nodes, so the
+# same callable serves the global (n, .) and per-shard (1, .) layouts).
+# Under gating or edge_weight the self weight is always derived as
+# ``1 - sum_d w_d`` per node, so every realized row stays stochastic (the
+# mass of a dropped edge returns to self).  Directed Shifts rounds are then
+# row- but not column-stochastic -- exact mean preservation holds for
+# symmetric Matchings (both endpoints drop the pair or neither does) and
+# for symmetric weight choices, measured rather than assumed elsewhere.
+
+def _assemble_meta(meta, node_gate):
+    """Stack user metadata and the alive flag into one (n, M) f32 matrix.
+
+    Returns ``(meta_mat | None, n_user_cols, has_gate)``; the gate flag is
+    always the LAST column so both ends of an edge can read it after the
+    permute."""
+    cols = []
+    n_user = 0
+    if meta is not None:
+        m = jnp.asarray(meta, jnp.float32)
+        if m.ndim == 1:
+            m = m[:, None]
+        n_user = m.shape[1]
+        cols.append(m)
+    if node_gate is not None:
+        g = jnp.asarray(node_gate)
+        cols.append(g.astype(jnp.float32)[:, None])
+    if not cols:
+        return None, 0, False
+    return jnp.concatenate(cols, axis=1), n_user, node_gate is not None
+
+
+def _f32_group_index(layout: flatbuf.FlatLayout) -> int:
+    """The dtype group the metadata columns ride on (f32 if present)."""
+    for i, g in enumerate(layout.groups):
+        if jnp.dtype(g.dtype) == jnp.dtype(jnp.float32):
+            return i
+    return 0
+
+
+def _wcol(w):
+    """Broadcast a per-node weight against an (n, B) buffer."""
+    w = jnp.asarray(w, jnp.float32)
+    return w[:, None] if w.ndim == 1 else w
+
+
+def _runtime_combine(bufs: list, layout: flatbuf.FlatLayout, permute,
+                     base_ws: list, self_w, meta_mat, n_user: int,
+                     has_gate: bool, edge_weight, keep) -> list:
+    """Weighted combine with traced weights / piggybacked metadata.
+
+    ``permute(arr, d)`` returns edge ``d``'s received array (roll, take, or
+    ppermute -- the caller picks the wire primitive, so this one body
+    serves the global and the shard-native paths).  ``keep`` is an optional
+    broadcastable mask of rows that keep their value bit-exactly (matching
+    fixed points)."""
+    D = len(base_ws)
+    gi = _f32_group_index(layout)
+    recvs: list = [[None] * D for _ in bufs]
+    recv_meta: list = [None] * D
+    for d in range(D):
+        for j, buf in enumerate(bufs):
+            if j == gi and meta_mat is not None:
+                aug = jnp.concatenate(
+                    [buf, meta_mat.astype(buf.dtype)], axis=1)
+                r = permute(aug, d)
+                recvs[j][d] = r[:, :buf.shape[1]]
+                recv_meta[d] = r[:, buf.shape[1]:].astype(jnp.float32)
+            else:
+                recvs[j][d] = permute(buf, d)
+    own_user = meta_mat[:, :n_user] if n_user else None
+    own_alive = meta_mat[:, -1] > 0.5 if has_gate else None
+    eff = []
+    for d in range(D):
+        w = base_ws[d]
+        if edge_weight is not None:
+            w = edge_weight(own_user, recv_meta[d][:, :n_user]
+                            if n_user else None, w)
+        w = jnp.asarray(w, jnp.float32)
+        if has_gate:
+            both = jnp.logical_and(own_alive, recv_meta[d][:, -1] > 0.5)
+            w = jnp.where(both, w, jnp.zeros_like(w))
+        eff.append(w)
+    if self_w is None or has_gate or edge_weight is not None:
+        # dropped-edge mass returns to self: rows stay stochastic
+        self_col = 1.0 - sum(_wcol(w) for w in eff)
+    else:
+        self_col = _wcol(self_w)
+    outs = []
+    for j, buf in enumerate(bufs):
+        x32 = buf.astype(jnp.float32)
+        acc = self_col * x32
+        for d in range(D):
+            acc = acc + _wcol(eff[d]) * recvs[j][d].astype(jnp.float32)
+        if keep is not None:
+            acc = jnp.where(keep, x32, acc)
+        outs.append(acc.astype(buf.dtype))
+    return outs
+
+
+def _runtime_operands(n: int, self_w, base_ws: list, meta_mat):
+    """Normalize runtime values to per-node arrays so ONE pytree (with one
+    spec tree) carries them across the shard_map boundary."""
+    def pernode(w):
+        if w is None:
+            return None
+        w = jnp.asarray(w, jnp.float32)
+        return jnp.broadcast_to(w, (n,)) if w.ndim == 0 else w
+    return {"self": pernode(self_w), "ws": tuple(pernode(w) for w in base_ws),
+            "meta": meta_mat}
+
+
+def _runtime_mix(tree: PyTree, *, rounds: list, base_ws: list, self_w,
+                 meta, node_gate, edge_weight, fixed_mask, mesh, axis_name,
+                 specs) -> PyTree:
+    """Runtime-valued Shifts/Matching round: global or shard-native.
+
+    ``rounds[d]`` is edge ``d``'s ppermute send-pairs (the global path
+    derives its gather index from them); ``base_ws[d]`` its base weight
+    (float, traced scalar, or per-node array; ``edge_weight`` may override).
+    """
+    n = _node_count(tree)
+    meta_mat, n_user, has_gate = _assemble_meta(meta, node_gate)
+
+    if _shard_native(mesh, axis_name, n):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        spec_tree = _resolve_specs(tree, specs, axis_name)
+        rt = _runtime_operands(n, self_w, base_ws, meta_mat)
+        rt_specs = jax.tree.map(lambda x: P(axis_name), rt)
+        fixed_arr = None if fixed_mask is None else jnp.asarray(fixed_mask)
+
+        def local_fn(t, rt):
+            layout = flatbuf.layout_of(t, pad_multiple=1)
+            layout, bufs = flatbuf.pack(t, layout)
+            keep = (None if fixed_arr is None
+                    else fixed_arr[jax.lax.axis_index(axis_name)])
+            outs = _runtime_combine(
+                bufs, layout,
+                lambda arr, d: jax.lax.ppermute(arr, axis_name,
+                                                perm=rounds[d]),
+                list(rt["ws"]), rt["self"], rt["meta"], n_user, has_gate,
+                edge_weight, keep)
+            return flatbuf.unpack(layout, outs)
+
+        return shard_map(local_fn, mesh=mesh, in_specs=(spec_tree, rt_specs),
+                         out_specs=spec_tree, check_rep=False)(tree, rt)
+
+    layout, bufs = flatbuf.pack(tree)
+    # receive index: node i receives from the node that SENDS to i
+    idxs = []
+    for pairs in rounds:
+        src = [0] * n
+        for s, dst in pairs:
+            src[dst] = s
+        idxs.append(jnp.asarray(src))
+    keep = (None if fixed_mask is None
+            else jnp.asarray(fixed_mask)[:, None])
+    outs = _runtime_combine(
+        bufs, layout, lambda arr, d: jnp.take(arr, idxs[d], axis=0),
+        base_ws, self_w, meta_mat, n_user, has_gate, edge_weight, keep)
+    return flatbuf.unpack(layout, outs)
+
+
+# ---------------------------------------------------------------------------
 # Overlapped (delayed-mix) pipeline: send / combine halves
 # ---------------------------------------------------------------------------
 #
@@ -472,10 +656,22 @@ def delayed_mix(template: PyTree, bufs, realization, *,
         out_specs=spec_tree, check_rep=False)(bufs)
 
 
+def _is_runtime_round(self_w, ws, meta, edge_weight, node_gate) -> bool:
+    """True when the round needs the traced-weight combine path (any traced
+    weight, derived self weight, metadata, loss-aware weights, or gating).
+    A plain static round MUST return False so it takes the byte-identical
+    legacy path."""
+    return (meta is not None or edge_weight is not None
+            or node_gate is not None
+            or not _is_static_value(self_w)
+            or any(not _is_static_value(w) for w in ws))
+
+
 def mix_shifts(tree: PyTree, self_weight: float,
                shifts: list[tuple[int, float]],
                compression: str | None = None, *, mesh=None,
-               axis_name: str = "node", specs=None) -> PyTree:
+               axis_name: str = "node", specs=None, meta=None,
+               edge_weight=None, node_gate=None) -> PyTree:
     """x_i <- self_weight * x_i + sum_d w_d * x_{(i - s_d) mod n}.
 
     Each (s_d, w_d) descriptor means node i *sends* its buffer to node
@@ -496,8 +692,24 @@ def mix_shifts(tree: PyTree, self_weight: float,
     dtype group); the local term stays full precision.  Biased (~0.4% of
     per-leaf max); exact-averaging of Lemma 1 becomes approximate --
     measured in tests.
+
+    Runtime-valued rounds (traced weights, ``meta=``/``edge_weight=``/
+    ``node_gate=``) take the traced combine path (see the runtime section
+    above); the wire structure is unchanged, ``compression`` is refused.
     """
     n = _node_count(tree)
+    ws_list = [w for _, w in shifts]
+    if _is_runtime_round(self_weight, ws_list, meta, edge_weight, node_gate):
+        if compression is not None:
+            raise ValueError(
+                "compression is not supported on runtime-valued rounds "
+                "(traced weights / metadata / gating); drop compression= "
+                "or use static weights")
+        return _runtime_mix(
+            tree, rounds=[_shift_pairs(n, s) for s, _ in shifts],
+            base_ws=ws_list, self_w=self_weight, meta=meta,
+            node_gate=node_gate, edge_weight=edge_weight, fixed_mask=None,
+            mesh=mesh, axis_name=axis_name, specs=specs)
     if _shard_native(mesh, axis_name, n):
         rounds = [(_shift_pairs(n, s), w) for s, w in shifts]
         return _mix_sharded(tree, mesh=mesh, specs=specs,
@@ -532,7 +744,8 @@ def mix_shifts(tree: PyTree, self_weight: float,
 
 def mix_matching(tree: PyTree, partner: tuple, w_self: float = 0.5,
                  compression: str | None = None, mesh=None,
-                 axis_name: str = "node", specs=None) -> PyTree:
+                 axis_name: str = "node", specs=None, meta=None,
+                 edge_weight=None, node_gate=None) -> PyTree:
     """Pairwise gossip: x_i <- w_self * x_i + (1 - w_self) * x_{partner[i]}.
 
     ``partner`` is an involution; fixed points keep their value EXACTLY
@@ -545,11 +758,39 @@ def mix_matching(tree: PyTree, partner: tuple, w_self: float = 0.5,
     compression='int8' quantizes the permuted payload exactly like
     :func:`mix_shifts` (per-leaf-segment scales ride along as a second,
     tiny permute).
+
+    Runtime-valued rounds (traced ``w_self``, ``meta=``/``edge_weight=``/
+    ``node_gate=``) take the traced combine path; fixed points still keep
+    their value bit-exactly, and under a per-node gate the pair averages
+    only when BOTH endpoints are alive (the symmetric drop that keeps a
+    matching round exactly mean-preserving).
     """
     n = len(partner)
     fixed = np.fromiter((j == i for i, j in enumerate(partner)),
                         dtype=bool, count=n)
     fixed_mask = fixed if fixed.any() else None
+
+    if _is_runtime_round(w_self, (), meta, edge_weight, node_gate):
+        if compression is not None:
+            raise ValueError(
+                "compression is not supported on runtime-valued rounds "
+                "(traced weights / metadata / gating); drop compression= "
+                "or use static weights")
+        pairs = [(src, dst) for dst, src in enumerate(partner)]
+        base = (0.5 if w_self is None
+                else 1.0 - jnp.asarray(w_self, jnp.float32))
+        # paired nodes carry the peer weight; fixed points contribute 0 so
+        # the derived self weight stays 1 there (keep mask then makes the
+        # row bit-exact, not just algebraically e_i)
+        base = jnp.where(jnp.asarray(fixed), 0.0,
+                         jnp.broadcast_to(base, (n,)))
+        return _runtime_mix(
+            tree, rounds=[pairs], base_ws=[base],
+            self_w=None if (node_gate is not None or edge_weight is not None
+                            or w_self is None) else w_self,
+            meta=meta, node_gate=node_gate, edge_weight=edge_weight,
+            fixed_mask=fixed_mask, mesh=mesh, axis_name=axis_name,
+            specs=specs)
     w_peer = 1.0 - w_self
 
     if _shard_native(mesh, axis_name, n):
@@ -622,22 +863,56 @@ def mix_shifts_per_leaf(tree: PyTree, self_weight: float,
 
 def mix_realization(tree: PyTree, realization, *,
                     compression: str | None = None, mesh=None,
-                    axis_name: str = "node", specs=None) -> PyTree:
-    """Lower one realization-IR node onto its wire path."""
+                    axis_name: str = "node", specs=None, meta=None,
+                    edge_weight=None, node_gate=None) -> PyTree:
+    """Lower one realization-IR node onto its wire path.
+
+    ``meta``/``edge_weight``/``node_gate`` flow through to the runtime
+    combine of Shifts/Matching rounds (see :func:`mix_shifts`); a
+    :class:`Gated` node realizes its inner round or Identity from its
+    traced gate -- the wire is ALWAYS issued, only the combine is gated."""
     if isinstance(realization, Identity):
         return tree
+    if isinstance(realization, Gated):
+        gate = realization.gate
+        if getattr(gate, "ndim", 0) == 0:
+            # whole-round gate: run the round unconditionally (the permute
+            # must not sit under a cond), select the result per element
+            mixed = mix_realization(
+                tree, realization.inner, compression=compression, mesh=mesh,
+                axis_name=axis_name, specs=specs, meta=meta,
+                edge_weight=edge_weight, node_gate=node_gate)
+            return jax.tree.map(
+                lambda m, t: jnp.where(gate, m, t), mixed, tree)
+        if node_gate is not None:
+            raise ValueError("Gated realization with an explicit node_gate=;"
+                             " pass one or the other")
+        if isinstance(realization.inner, Dense):
+            raise ValueError(
+                "per-node gating of a Dense round is not supported; gate "
+                "Shifts/Matching rounds (or use a scalar whole-round gate)")
+        return mix_realization(
+            tree, realization.inner, compression=compression, mesh=mesh,
+            axis_name=axis_name, specs=specs, meta=meta,
+            edge_weight=edge_weight, node_gate=gate)
     if isinstance(realization, Shifts):
         return mix_shifts(tree, realization.self_w, list(realization.shifts),
                           compression, mesh=mesh, axis_name=axis_name,
-                          specs=specs)
+                          specs=specs, meta=meta, edge_weight=edge_weight,
+                          node_gate=node_gate)
     if isinstance(realization, Matching):
         return mix_matching(tree, realization.partner, realization.w_self,
-                            compression, mesh, axis_name, specs)
+                            compression, mesh, axis_name, specs, meta=meta,
+                            edge_weight=edge_weight, node_gate=node_gate)
     if isinstance(realization, Dense):
         if compression is not None:
             raise ValueError(
                 f"compression={compression!r} has no dense-matrix wire "
                 f"format; only Shifts/Matching realizations quantize")
+        if meta is not None or edge_weight is not None or node_gate is not None:
+            raise ValueError(
+                "metadata piggyback / loss-aware weights / gating need a "
+                "permute wire (Shifts or Matching); Dense rounds all-gather")
         return mix_dense(tree, realization.W, mesh=mesh,
                          axis_name=axis_name, specs=specs)
     raise TypeError(f"not a realization IR node: {realization!r}")
@@ -684,9 +959,51 @@ def _mix_static(tree: PyTree, *, topology: Topology, k: int,
     return mix(tree, topology, k, mesh=mesh, specs=specs)
 
 
+def mix_scheduled(tree: PyTree, topology: Topology, pos, gate=None, *,
+                  compression: str | None = None, mesh=None, specs=None,
+                  meta=None, edge_weight=None, node_gate=None) -> PyTree:
+    """Traced-POSITION variant: the schedule position ``pos`` is a traced
+    int32 scalar living in optimizer state, advanced only on rounds that
+    actually communicate (``pos_next = pos + gate``) -- the data-dependent
+    generalization of ``gossip(every=k)``.  Realization ``pos % period`` is
+    selected by ``lax.switch``; an optional traced scalar ``gate`` selects
+    between the mixed result and the unmixed tree WITHOUT skipping the
+    wire (every branch issues its permutes unconditionally, so a gated-off
+    round still moves its bytes and no collective sits under a data-
+    dependent cond -- SPMD-safe because ``pos``/``gate`` are replicated).
+
+    Exactness: because ``pos`` only advances on communicating rounds, a
+    finite-time family (one_peer_exp / base_k / ceca) still exactly
+    averages once ``period`` COMMUNICATING rounds complete, however many
+    skipped rounds interleave -- the property test asserts this.
+
+    Periodic schedules only (same restriction and reasoning as
+    :func:`mix_switch`)."""
+    if not topology.schedule.is_periodic:
+        raise AperiodicScheduleError(
+            f"mix_scheduled needs a periodic schedule, but "
+            f"{topology.name!r} carries {topology.schedule!r}")
+    period = topology.schedule.period
+
+    def branch(k):
+        def f(t):
+            return mix_realization(
+                t, topology.realization(k), compression=compression,
+                mesh=mesh, specs=specs, meta=meta, edge_weight=edge_weight,
+                node_gate=node_gate)
+        return f
+
+    mixed = jax.lax.switch(pos % period, [branch(k) for k in range(period)],
+                           tree)
+    if gate is None:
+        return mixed
+    return jax.tree.map(lambda m, t: jnp.where(gate, m, t), mixed, tree)
+
+
 def gossip_spec(topology: Topology, step: int,
                 layout: flatbuf.FlatLayout | None = None,
-                compression: str | None = None) -> dict:
+                compression: str | None = None,
+                meta_cols: int = 0) -> dict:
     """Structural description of one gossip round, read straight off the
     realization IR (for roofline accounting).
 
@@ -698,9 +1015,20 @@ def gossip_spec(topology: Topology, step: int,
     the packed-path byte accounting: collectives per step (int8 rounds move
     TWO permutes per dtype group -- payload plus the per-leaf scale row)
     and bytes sent per node, split payload vs. scales so dry-run rooflines
-    match the HLO."""
+    match the HLO.
+
+    ``meta_cols`` counts the piggybacked per-node metadata columns (loss,
+    grad-norm, deadline flag -- INCLUDING the gate column when present):
+    they ride the f32 group's existing permute, so they add ZERO
+    collectives but ``4 * meta_cols`` bytes per payload copy, reported as
+    a separate ``meta_bytes_per_node_per_step`` split (mirroring the int8
+    scale-row split) so :mod:`benchmarks.check_comm_regression` gates the
+    new bytes honestly."""
     r = topology.realization(step)
     n = topology.n
+    gated = isinstance(r, Gated)
+    if gated:
+        r = r.inner          # the wire structure is always issued
     mult = r.wire_multiplier(n)
     if isinstance(r, Shifts):
         spec = {"kind": "ppermute", "rounds": len(r.shifts),
@@ -717,6 +1045,10 @@ def gossip_spec(topology: Topology, step: int,
         spec = {"kind": "dense", "rounds": 1, "fanin": r.max_degree}
         rounds = 1
     spec["wire_multiplier"] = mult
+    if gated:
+        spec["gated"] = True
+    if meta_cols:
+        spec["meta_cols"] = meta_cols
     if layout is not None:
         split = flatbuf.wire_bytes_split(layout, compression)
         quantized = (compression == "int8"
@@ -726,8 +1058,12 @@ def gossip_spec(topology: Topology, step: int,
         # per-leaf scale payload (the old accounting missed it).
         spec["collectives_per_step"] = (
             rounds * len(layout.groups) * (2 if quantized else 1))
+        # piggybacked metadata rides the f32 group's EXISTING permute: zero
+        # extra collectives, 4 bytes per column per payload copy.
+        meta_bytes = 4 * meta_cols * mult
         spec["payload_bytes_per_node_per_step"] = split["payload"] * mult
         spec["scale_bytes_per_node_per_step"] = split["scales"] * mult
+        spec["meta_bytes_per_node_per_step"] = meta_bytes
         spec["bytes_per_node_per_step"] = (
-            (split["payload"] + split["scales"]) * mult)
+            (split["payload"] + split["scales"]) * mult + meta_bytes)
     return spec

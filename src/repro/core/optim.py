@@ -51,8 +51,10 @@ from .transforms import (
     OptState,
     DecentralizedOptimizer,
     adam_descent,
+    al_dsgd,
     average_gradients,
     chain,
+    deadline_skip,
     gossip,
     quantize_int8,
     quasi_global_momentum,
@@ -76,28 +78,46 @@ __all__ = [
 
 
 def dmsgd(topology: Topology, beta: float = 0.9, *, momentum_dtype=None,
-          compression: str | None = None,
-          overlap: bool = False) -> DecentralizedOptimizer:
+          compression: str | None = None, overlap: bool = False,
+          loss_aware: bool | float = False, deadline: bool = False,
+          when=None) -> DecentralizedOptimizer:
     """Algorithm 1 (paper's DmSGD); fused single-payload gossip.
 
     ``overlap=True`` selects the one-step-delayed (overlapped) mix: the
     payload's permute is issued at the top of the NEXT step so it hides
     under that step's backward -- see :func:`repro.core.transforms.gossip`.
+
+    Runtime-valued variants (feed ``aux=`` to ``update``):
+
+    * ``loss_aware=True`` (or a float ``pull`` strength) binds the AL-DSGD
+      adjacent-leader rule: each node pulls harder from better-loss
+      neighbors, the losses piggybacking on the existing permute.
+    * ``deadline=True`` prepends :func:`deadline_skip`: nodes whose
+      ``aux['alive']`` flag is False drop out of the round per node.
+    * ``when=`` (a traced predicate ``ctx -> bool``) makes whole-round
+      skips data-dependent; the schedule position rides optimizer state.
     """
+    rule = None
+    if loss_aware:
+        rule = al_dsgd() if loss_aware is True else al_dsgd(pull=loss_aware)
     return chain(
         trace_momentum(beta, dtype=momentum_dtype),
         scale_by_lr("m"),
         quantize_int8() if compression == "int8" else None,
-        gossip(where=("m_next", "x_next"), overlap=overlap),
+        deadline_skip() if deadline else None,
+        gossip(where=("m_next", "x_next"), overlap=overlap,
+               weights_from=rule, when=when),
         topology=topology, name="dmsgd", beta=beta)
 
 
 def dsgd(topology: Topology, *, momentum_dtype=None,
-         compression: str | None = None,
-         overlap: bool = False) -> DecentralizedOptimizer:
+         compression: str | None = None, overlap: bool = False,
+         loss_aware: bool | float = False, deadline: bool = False,
+         when=None) -> DecentralizedOptimizer:
     """Decentralized SGD = DmSGD with beta = 0 (Remark 8)."""
     opt = dmsgd(topology, beta=0.0, momentum_dtype=momentum_dtype,
-                compression=compression, overlap=overlap)
+                compression=compression, overlap=overlap,
+                loss_aware=loss_aware, deadline=deadline, when=when)
     return dataclasses.replace(opt, name="dsgd")
 
 
@@ -173,7 +193,8 @@ OPTIMIZERS = {
 
 def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
                    *, momentum_dtype=None, compression: str | None = None,
-                   overlap: bool = False) -> DecentralizedOptimizer:
+                   overlap: bool = False, loss_aware: bool | float = False,
+                   deadline: bool = False) -> DecentralizedOptimizer:
     """Name-keyed construction.
 
     Schedule handling lives in :class:`repro.core.plan.GossipPlan`
@@ -181,7 +202,18 @@ def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
     selects that step's realization, a traced array takes the
     ``lax.switch`` path); warm-up phases come from the
     ``allreduce_warmup(tau)(opt)`` wrapping combinator.
+
+    ``loss_aware=`` / ``deadline=`` bind the runtime-valued gossip hooks
+    (AL-DSGD weights, per-node deadline gating -- currently ``dmsgd`` and
+    ``dsgd`` only); both need per-node ``aux=`` data fed to ``update``.
     """
+    runtime_kw = {}
+    if loss_aware or deadline:
+        if name not in ("dmsgd", "dsgd"):
+            raise ValueError(
+                f"loss_aware/deadline runtime gossip is wired for "
+                f"dmsgd/dsgd, not {name!r}")
+        runtime_kw = {"loss_aware": loss_aware, "deadline": deadline}
     if name == "parallel_msgd":
         if overlap:
             raise ValueError(
@@ -191,13 +223,14 @@ def make_optimizer(name: str, topology: Topology, beta: float = 0.9,
                              momentum_dtype=momentum_dtype)
     if name == "dsgd":
         return dsgd(topology, momentum_dtype=momentum_dtype,
-                    compression=compression, overlap=overlap)
+                    compression=compression, overlap=overlap, **runtime_kw)
     if name == "d_adamw":
         return d_adamw(topology, b1=beta, momentum_dtype=momentum_dtype,
                        compression=compression, overlap=overlap)
     if name in OPTIMIZERS:
         return OPTIMIZERS[name](topology, beta=beta,
                                 momentum_dtype=momentum_dtype,
-                                compression=compression, overlap=overlap)
+                                compression=compression, overlap=overlap,
+                                **runtime_kw)
     raise KeyError(f"unknown optimizer {name!r}; "
                    f"options: {sorted(OPTIMIZERS) + ['parallel_msgd']}")

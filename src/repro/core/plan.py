@@ -56,7 +56,9 @@ import jax.numpy as jnp
 from . import gossip
 from .cache import CompileCache
 from .topology import (
+    AperiodicScheduleError,
     Dense,
+    Gated,
     Identity,
     Matching,
     Shifts,
@@ -148,6 +150,20 @@ class GossipPlan:
     # ``flush_fn(io, *args)`` drains the in-flight buffer (overlap plans
     # only); ``for_optimizer`` binds the optimizer's ``flush_pending``.
     flush_fn: Callable | None = None
+    # jit sharding annotations, applied to EVERY compiled executable
+    # (pytrees matching ``fn``'s post-mix argument/output structure) --
+    # plans own the whole jit contract, so launch code lowers via
+    # ``plan.lowered`` instead of wrapping its own jax.jit.  Wrapper
+    # executables with leading traced-weight arguments get an
+    # unconstrained slot prepended automatically.
+    in_shardings: Any = None
+    out_shardings: Any = None
+    # Data-dependent schedule: compile ONE executable whose schedule
+    # position is a TRACED optimizer-state value (``gossip.mix_scheduled``)
+    # -- the mix executor takes ``mix(t, pos, gate=None, ...)`` and the
+    # position advances only on rounds that actually communicate,
+    # generalizing ``every=k`` to runtime skip decisions.
+    scheduled: bool = False
 
     def __post_init__(self):
         # LRU-bounded: periodic schedules have a tiny working set and never
@@ -183,13 +199,36 @@ class GossipPlan:
                     "realizes time-varying dense matrices -- use a "
                     "permute-structured family (one_peer_exp, ceca, "
                     "base_k(k=1), random_match)")
+        if self.scheduled:
+            if self.overlap:
+                raise ValueError(
+                    "scheduled=True (data-dependent skip) cannot combine "
+                    "with the overlap pipeline: the in-flight realization "
+                    "would depend on a traced gate")
+            if self.warmup_steps:
+                raise ValueError(
+                    "scheduled=True cannot combine with the all-reduce "
+                    "warm-up phase: the warm-up executor takes no traced "
+                    "schedule position")
+            if self.every > 1:
+                raise ValueError(
+                    "scheduled=True generalizes every=k (the traced gate "
+                    "decides which rounds communicate); set one, not both")
+            if not self.topology.schedule.is_periodic:
+                raise AperiodicScheduleError(
+                    f"scheduled=True needs a periodic schedule "
+                    f"(lax.switch over the period), but "
+                    f"{self.topology.name!r} carries "
+                    f"{self.topology.schedule!r}")
 
     @classmethod
     def for_optimizer(cls, opt, fn: Callable | None = None,
                       mesh=None, specs=None,
-                      donate_argnums: tuple = ()) -> "GossipPlan":
+                      donate_argnums: tuple = (),
+                      in_shardings=None, out_shardings=None) -> "GossipPlan":
         """Plan matching a chain-built optimizer's topology, warm-up phase,
-        wire compression, communication interval, and overlap pipeline
+        wire compression, communication interval, data-dependent schedule
+        (``gossip(when=...)`` -> ``scheduled=True``), and overlap pipeline
         (whose flush executor is bound to the optimizer's
         ``flush_pending``)."""
         overlap = bool(getattr(opt, "overlap", False))
@@ -201,7 +240,9 @@ class GossipPlan:
                    compression=opt.compression, fn=fn, mesh=mesh,
                    specs=specs, every=getattr(opt, "gossip_every", 1),
                    overlap=overlap, donate_argnums=tuple(donate_argnums),
-                   flush_fn=flush_fn)
+                   flush_fn=flush_fn, in_shardings=in_shardings,
+                   out_shardings=out_shardings,
+                   scheduled=bool(getattr(opt, "scheduled_gossip", False)))
 
     def bind(self, fn: Callable) -> "GossipPlan":
         """Same plan parameters with ``fn`` bound (fresh compile cache)."""
@@ -249,19 +290,24 @@ class GossipPlan:
         return self._key_for(k)
 
     def _key_for(self, k: int) -> tuple:
-        """Phase/realization key ignoring the overlap pipelining shift."""
+        """Phase/realization key ignoring the overlap pipelining shift.
+
+        Classification is STRUCTURE-based (``Realization.structure_key``):
+        static-weight nodes key by values -- byte-identical to the
+        historical keys, so caches and HLO are unchanged -- while traced-
+        weight nodes key by wire structure only, so a whole pool of
+        runtime-weighted matchings shares ONE executable (the weights ride
+        as traced arguments, see :meth:`_weighted_executable`)."""
         if self.warmup_steps and k < self.warmup_steps:
             return ("warmup",)
+        if self.scheduled:
+            return ("scheduled",)
         r = self.realization(k)
-        if isinstance(r, Identity):
-            return ("identity",)
-        if isinstance(r, Shifts):
-            return ("shifts", r.self_w, r.shifts)
-        if isinstance(r, Matching):
-            return ("matching", r.partner, r.w_self)
-        if isinstance(self.topology.schedule, Static):
-            return ("static",)
-        return ("dense",)   # time-varying dense: one traced-W executable
+        if isinstance(r, Dense):
+            if not r.traced and isinstance(self.topology.schedule, Static):
+                return ("static",)
+            return ("dense",)   # time-varying / traced: one traced-W exec
+        return r.structure_key()
 
     @property
     def num_compiled(self) -> int:
@@ -282,13 +328,62 @@ class GossipPlan:
             top_full = full_averaging(self.topology.n)
             return lambda t: gossip.mix(t, top_full, 0, mesh=mesh,
                                         specs=specs)
+        if self.scheduled:
+            return self._scheduled_mix()
         r = self.realization(k)
-        if isinstance(r, Dense):
+        if isinstance(r, Dense) and not r.traced:
             return lambda t: gossip.mix_dense(t, r.W, mesh=mesh,
                                               specs=specs)
         comp = self.compression
-        return lambda t: gossip.mix_realization(t, r, compression=comp,
-                                                mesh=mesh, specs=specs)
+        # forwards meta=/edge_weight=/node_gate= so transform hooks
+        # (weights_from, deadline_skip) reach the runtime combine
+        return lambda t, **kw: gossip.mix_realization(
+            t, r, compression=comp, mesh=mesh, specs=specs, **kw)
+
+    def _scheduled_mix(self):
+        """The traced-position mix executor: ``mix(t, pos, gate=None,
+        **kw)`` (see :func:`repro.core.gossip.mix_scheduled`)."""
+        top, comp = self.topology, self.compression
+        mesh, specs = self.mesh, self.specs
+        return lambda t, pos, gate=None, **kw: gossip.mix_scheduled(
+            t, top, pos, gate, compression=comp, mesh=mesh, specs=specs,
+            **kw)
+
+    def _jit_kwargs(self, extra_leading: int = 0) -> dict:
+        """jit options every executable shares: donation and the plan-owned
+        sharding annotations, both shifted past ``extra_leading`` wrapper
+        arguments (the traced-W / traced-weights slot, left unconstrained)."""
+        kw: dict = {}
+        if self.donate_argnums:
+            kw["donate_argnums"] = tuple(i + extra_leading
+                                         for i in self.donate_argnums)
+        if self.in_shardings is not None:
+            ins = tuple(self.in_shardings)
+            if extra_leading:
+                ins = (None,) * extra_leading + ins
+            kw["in_shardings"] = ins
+        if self.out_shardings is not None:
+            kw["out_shardings"] = self.out_shardings
+        return kw
+
+    def _weighted_executable(self, key: tuple, template):
+        """ONE jitted executable per realization STRUCTURE: the traced
+        weights (and gate) arrive as the leading argument tuple and
+        ``with_weights`` rebinds them onto the structure template inside
+        the trace -- a pool of differently-weighted same-structure rounds
+        never retraces."""
+        fn = self._require_fn()
+        comp, mesh, specs = self.compression, self.mesh, self.specs
+
+        def build():
+            def call(wvals, *a):
+                r = template.with_weights(wvals)
+                return fn(lambda t, **kw: gossip.mix_realization(
+                    t, r, compression=comp, mesh=mesh, specs=specs, **kw),
+                    *a)
+            return jax.jit(call, **self._jit_kwargs(extra_leading=1))
+
+        return self._cache.get(key, build)
 
     def overlap_io(self, step: int) -> "OverlapIO":
         """The :class:`OverlapIO` bundle for pipelined step ``step``: its
@@ -311,7 +406,8 @@ class GossipPlan:
         realized ``W^{(k)}`` as its leading traced argument."""
         fn = self._require_fn()
         return self._cache.get(("dense",), lambda: jax.jit(
-            lambda W, *a: fn((lambda t: gossip.mix_dense(t, W)), *a)))
+            lambda W, *a: fn((lambda t: gossip.mix_dense(t, W)), *a),
+            **self._jit_kwargs(extra_leading=1)))
 
     def _realized_W(self, step: int) -> jax.Array:
         return jnp.asarray(self.realization(int(step)).dense(self.topology.n),
@@ -340,18 +436,26 @@ class GossipPlan:
                 key = self.realization_key(step)
                 io = self.overlap_io(step)
             return self._cache.get(key, lambda: jax.jit(
-                lambda *a: fn(io, *a),
-                donate_argnums=self.donate_argnums))
+                lambda *a: fn(io, *a), **self._jit_kwargs()))
         key = self.realization_key(step)
         if key == ("dense",):
             jitted = self._dense_executable()
             W = self._realized_W(step)
             return lambda *a: jitted(W, *a)
         fn = self._require_fn()
+        k = int(step)
+        if not (self.warmup_steps and k < self.warmup_steps) \
+                and not self.scheduled:
+            r = self.realization(k)
+            if getattr(r, "traced", False):
+                # runtime-valued round: ONE executable per structure, the
+                # weights fed as the leading traced argument
+                jitted = self._weighted_executable(key, r)
+                wvals = r.weight_values()
+                return lambda *a: jitted(wvals, *a)
         mix = self.mix(step)
         return self._cache.get(key, lambda: jax.jit(
-            lambda *a: fn(mix, *a),
-            donate_argnums=self.donate_argnums))
+            lambda *a: fn(mix, *a), **self._jit_kwargs()))
 
     def flush_step_fn(self, step: int) -> Callable:
         """Compiled drain of the overlap pipeline at python step ``step``:
@@ -376,9 +480,17 @@ class GossipPlan:
         """``jax.jit(...).lower(*args)`` for ``step``'s executable -- for
         HLO inspection and dry-run cost analysis (args may be
         ``ShapeDtypeStruct``s, carrying shardings if desired)."""
-        if self.realization_key(step) == ("dense",):
+        key = self.realization_key(step)
+        if key == ("dense",):
             return self._dense_executable().lower(self._realized_W(step),
                                                   *args)
+        k = int(step)
+        if not (self.warmup_steps and k < self.warmup_steps) \
+                and not self.scheduled and not self.overlap:
+            r = self.realization(k)
+            if getattr(r, "traced", False):
+                return self._weighted_executable(key, r).lower(
+                    r.weight_values(), *args)
         return self.step_fn(step).lower(*args)
 
     def _require_fn(self) -> Callable:

@@ -1,9 +1,19 @@
-"""Learning-rate schedules (the paper's training protocol, Sec. 6.1/6.2).
+"""Learning-rate schedules (the paper's training protocol, Sec. 6.1/6.2)
+and the traced GOSSIP schedule position.
 
-Warmup over the first ``warmup_steps`` then step decay by ``decay_factor`` at
-each milestone -- the [21] ImageNet-in-1h protocol the paper follows, plus the
-linear scaling rule.  Also the theory-side rate gamma = sqrt(n (1-beta)^3 / T)
-from Corollary 1 / Theorem 1.
+LR: warmup over the first ``warmup_steps`` then step decay by
+``decay_factor`` at each milestone -- the [21] ImageNet-in-1h protocol the
+paper follows, plus the linear scaling rule.  Also the theory-side rate
+gamma = sqrt(n (1-beta)^3 / T) from Corollary 1 / Theorem 1.
+
+Gossip: with data-dependent skip (``transforms.gossip(when=...)``) the
+topology's schedule position is no longer derivable from the step count --
+it lives in optimizer state (``OptState.sched_pos``) and advances only on
+rounds that actually COMMUNICATE (:func:`advance_position`).  A finite-time
+family (one-peer exponential, base_k, ceca) then still exactly averages
+once ``period`` communicating rounds complete, however many skipped rounds
+interleave -- ``gossip.mix_scheduled`` selects realization
+``pos % period`` by ``lax.switch``.
 """
 from __future__ import annotations
 
@@ -12,7 +22,22 @@ from typing import Sequence
 
 import jax.numpy as jnp
 
-__all__ = ["warmup_step_decay", "theory_lr", "constant"]
+__all__ = ["warmup_step_decay", "theory_lr", "constant",
+           "initial_position", "advance_position"]
+
+
+def initial_position():
+    """The gossip schedule's starting position (traced optimizer state)."""
+    return jnp.zeros((), jnp.int32)
+
+
+def advance_position(pos, gate=None):
+    """``pos_next = pos + gate``: the schedule advances ONLY on rounds that
+    actually communicate (``gate`` a traced bool scalar; None = always
+    communicated, the static ``every=1`` behavior)."""
+    if gate is None:
+        return pos + jnp.ones((), pos.dtype)
+    return pos + jnp.asarray(gate).astype(pos.dtype)
 
 
 def constant(lr: float):

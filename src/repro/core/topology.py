@@ -44,6 +44,7 @@ __all__ = [
     "Matching",
     "Dense",
     "Identity",
+    "Gated",
     "Realization",
     "Schedule",
     "Static",
@@ -75,25 +76,98 @@ class AperiodicScheduleError(ValueError):
     ``lax.switch``) was handed an aperiodic :class:`Schedule`."""
 
 
+def _is_static_value(w) -> bool:
+    """True when ``w`` is a concrete Python/NumPy scalar (part of the
+    compile key); False for jax arrays and tracers (runtime values)."""
+    return isinstance(w, (int, float, np.integer, np.floating))
+
+
 # ---------------------------------------------------------------------------
 # Realization IR
 # ---------------------------------------------------------------------------
+#
+# Realization weights come in two flavors.  STATIC weights (Python floats)
+# are part of the node's identity -- they hash, compare, and land in
+# ``GossipPlan``'s compile key, so two rounds with different static weights
+# compile separately.  TRACED weights (jax arrays / tracers) are runtime
+# values: the node's ``structure_key()`` covers only the wire structure
+# (which shifts, which pairs), ``weight_values()`` exposes the weights as
+# traced executable arguments, and a whole pool of differently-weighted
+# rounds with the same structure shares ONE compiled executable.  The
+# ``traced`` property distinguishes the two; every static-weight code path
+# is byte-identical to before this distinction existed.
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Shifts:
     """Circulant realization: ``x_i^+ = self_w x_i + sum_d w_d x_{(i-s_d)%n}``.
 
     Each ``(s, w)`` descriptor means node ``i`` *sends* its buffer by
     ``+s`` (what ``jax.lax.ppermute``/``jnp.roll`` consume on the node mesh
     axis) and receives from ``(i - s) mod n`` with weight ``w``.
+
+    Weights (``self_w`` and each shift's ``w``) are Python floats on the
+    static path; any of them may instead be a traced jax scalar -- or, for
+    per-edge weights, a shape-``(n,)`` array giving each RECEIVING node its
+    own weight -- in which case the realization is ``traced`` and compiles
+    by structure (see module note above).  A traced ``self_w=None`` derives
+    the self weight as ``1 - sum_d w_d`` per node (row-stochasticity by
+    construction).
     """
 
-    self_w: float
-    shifts: tuple  # tuple[(int shift, float weight), ...]
+    self_w: float | None
+    shifts: tuple  # tuple[(int shift, float-or-traced weight), ...]
 
     def __post_init__(self):
         object.__setattr__(self, "shifts", tuple(
-            (int(s), float(w)) for s, w in self.shifts))
+            (int(s), float(w) if _is_static_value(w) else w)
+            for s, w in self.shifts))
+        if _is_static_value(self.self_w):
+            object.__setattr__(self, "self_w", float(self.self_w))
+        elif self.self_w is None and not self.traced:
+            raise ValueError(
+                "Shifts(self_w=None) is only meaningful with traced shift "
+                "weights (self_w is then derived as 1 - sum of weights)")
+
+    @property
+    def traced(self) -> bool:
+        return (not _is_static_value(self.self_w)
+                or any(not _is_static_value(w) for _, w in self.shifts))
+
+    def structure_key(self) -> tuple:
+        """Hashable compile key.  Static nodes key by VALUES (identical to
+        the historical key, so caches and HLO are unchanged); traced nodes
+        key by structure only -- the weights ride as executable arguments."""
+        if not self.traced:
+            return ("shifts", self.self_w, self.shifts)
+        return ("shifts*", self.self_w is None,
+                tuple(s for s, _ in self.shifts))
+
+    def weight_values(self) -> tuple:
+        """The traced weight operands, in ``(self_w?, *shift_ws)`` order
+        (``self_w`` omitted when derived)."""
+        ws = tuple(w for _, w in self.shifts)
+        return ws if self.self_w is None else (self.self_w,) + ws
+
+    def with_weights(self, values: tuple) -> "Shifts":
+        """Rebuild from :meth:`weight_values`-ordered operands."""
+        if self.self_w is None:
+            self_w, ws = None, values
+        else:
+            self_w, ws = values[0], values[1:]
+        return Shifts(self_w, tuple(
+            (s, w) for (s, _), w in zip(self.shifts, ws)))
+
+    def __eq__(self, other):
+        if not isinstance(other, Shifts):
+            return NotImplemented
+        if self.traced or other.traced:
+            return self is other
+        return (self.self_w, self.shifts) == (other.self_w, other.shifts)
+
+    def __hash__(self):
+        if self.traced:
+            return id(self)
+        return hash(("Shifts", self.self_w, self.shifts))
 
     @property
     def max_degree(self) -> int:
@@ -104,6 +178,11 @@ class Shifts:
         return len(self.shifts)
 
     def dense(self, n: int) -> np.ndarray:
+        if self.traced:
+            raise ValueError(
+                "a traced-weight Shifts has no concrete dense matrix; "
+                "resolve the weights first (with_weights) or use the "
+                "gossip wire path")
         W = np.zeros((n, n), dtype=np.float64)
         np.fill_diagonal(W, self.self_w)
         for s, w in self.shifts:
@@ -112,7 +191,7 @@ class Shifts:
         return W
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Matching:
     """Pairwise realization: node ``i`` averages with ``partner[i]``.
 
@@ -121,6 +200,14 @@ class Matching:
     Paired nodes take ``w_self`` on their own value and ``1 - w_self`` on
     the partner's.  ANY matching is one explicit-pairs collective-permute
     on the wire, no matter how irregular the pairing.
+
+    ``w_self`` is a Python float on the static path; a traced jax scalar
+    or shape-``(n,)`` per-node array makes the realization ``traced``
+    (structure-keyed compile, weights as executable arguments).  Per-node
+    ``w_self`` values make ``W`` row- but not column-stochastic unless the
+    two endpoints of every pair agree -- loss-aware pulls (AL-DSGD) accept
+    this deliberately; exact mean preservation then holds only for
+    symmetric weight choices.
     """
 
     partner: tuple  # tuple[int, ...], involution over range(n)
@@ -129,11 +216,40 @@ class Matching:
     def __post_init__(self):
         p = tuple(int(j) for j in self.partner)
         object.__setattr__(self, "partner", p)
+        if _is_static_value(self.w_self):
+            object.__setattr__(self, "w_self", float(self.w_self))
         for i, j in enumerate(p):
             if not 0 <= j < len(p) or p[j] != i:
                 raise ValueError(
                     f"Matching.partner must be an involution; "
                     f"partner[{i}]={j} but partner[{j}]={p[j] if 0 <= j < len(p) else '?'}")
+
+    @property
+    def traced(self) -> bool:
+        return not _is_static_value(self.w_self)
+
+    def structure_key(self) -> tuple:
+        if not self.traced:
+            return ("matching", self.partner, self.w_self)
+        return ("matching*", self.partner)
+
+    def weight_values(self) -> tuple:
+        return (self.w_self,)
+
+    def with_weights(self, values: tuple) -> "Matching":
+        return Matching(self.partner, values[0])
+
+    def __eq__(self, other):
+        if not isinstance(other, Matching):
+            return NotImplemented
+        if self.traced or other.traced:
+            return self is other
+        return (self.partner, self.w_self) == (other.partner, other.w_self)
+
+    def __hash__(self):
+        if self.traced:
+            return id(self)
+        return hash(("Matching", self.partner, self.w_self))
 
     @property
     def max_degree(self) -> int:
@@ -143,6 +259,11 @@ class Matching:
         return 1
 
     def dense(self, n: int) -> np.ndarray:
+        if self.traced:
+            raise ValueError(
+                "a traced-weight Matching has no concrete dense matrix; "
+                "resolve the weights first (with_weights) or use the "
+                "gossip wire path")
         W = np.eye(n, dtype=np.float64)
         for i, j in enumerate(self.partner):
             if j != i:
@@ -163,11 +284,26 @@ class Dense:
     W: np.ndarray
 
     def __post_init__(self):
-        object.__setattr__(self, "W", np.asarray(self.W, dtype=np.float64))
+        if not self.traced:
+            object.__setattr__(self, "W", np.asarray(self.W,
+                                                     dtype=np.float64))
+
+    @property
+    def traced(self) -> bool:
+        return not isinstance(self.W, (np.ndarray, list, tuple))
+
+    def structure_key(self) -> tuple:
+        return ("dense*",) if self.traced else ("dense", self.W.shape[0])
+
+    def weight_values(self) -> tuple:
+        return (self.W,)
+
+    def with_weights(self, values: tuple) -> "Dense":
+        return Dense(values[0])
 
     @property
     def max_degree(self) -> int:
-        off = self.W.copy()
+        off = np.asarray(self.W).copy()
         np.fill_diagonal(off, 0.0)
         return int((off > 0).sum(axis=1).max(initial=0))
 
@@ -185,6 +321,11 @@ class Dense:
 class Identity:
     """Skipped round: ``W = I``, zero bytes on the wire."""
 
+    traced = False
+
+    def structure_key(self) -> tuple:
+        return ("identity",)
+
     @property
     def max_degree(self) -> int:
         return 0
@@ -196,7 +337,70 @@ class Identity:
         return np.eye(n, dtype=np.float64)
 
 
-Realization = Shifts | Matching | Dense | Identity
+@dataclasses.dataclass(frozen=True, eq=False)
+class Gated:
+    """Runtime-gated realization: ``inner`` when ``gate`` holds, else
+    :class:`Identity` -- per NODE when ``gate`` is a shape-``(n,)`` bool
+    array (a straggler drops out of the round; its row of ``W`` collapses
+    to ``e_i``), whole-round when ``gate`` is a scalar (a skipped round
+    everyone agrees on, the data-dependent generalization of
+    ``gossip(every=k)``).
+
+    The gate is a TRACED value: the wire structure (``inner``'s permutes)
+    is always issued -- a gated-off round still moves its bytes, it just
+    does not combine them -- so one executable serves both outcomes and
+    no collective ever sits inside a ``lax.cond``.  For a per-node gate
+    the edge ``(i, j)`` is active only when BOTH endpoints are alive:
+    symmetric ``Matching`` rounds then stay exactly mean-preserving
+    (either both average or both keep), while directed ``Shifts`` rounds
+    are row- but not column-stochastic under partial gating -- documented
+    straggler-tolerance semantics, measured in bench_hetero.
+
+    A Python-bool gate is folded immediately (``inner`` or ``IDENTITY``)
+    and never constructs a ``Gated`` node.
+    """
+
+    inner: "Realization"
+    gate: object   # traced bool scalar or (n,) bool array
+
+    def __post_init__(self):
+        if isinstance(self.inner, (Gated, Identity)):
+            raise TypeError(
+                f"Gated(inner={type(self.inner).__name__}) is not "
+                "meaningful; gate a Shifts/Matching/Dense round directly")
+
+    def __new__(cls, inner=None, gate=None):
+        if isinstance(gate, (bool, np.bool_)):
+            return inner if gate else IDENTITY
+        return super().__new__(cls)
+
+    traced = True
+
+    def structure_key(self) -> tuple:
+        return ("gated", getattr(self.gate, "ndim", 0) == 0,
+                self.inner.structure_key())
+
+    def weight_values(self) -> tuple:
+        return (self.gate,) + self.inner.weight_values()
+
+    def with_weights(self, values: tuple) -> "Gated":
+        return Gated(self.inner.with_weights(tuple(values[1:])), values[0])
+
+    @property
+    def max_degree(self) -> int:
+        return self.inner.max_degree
+
+    def wire_multiplier(self, n: int) -> int:
+        # the wire structure is always issued (see class docstring)
+        return self.inner.wire_multiplier(n)
+
+    def dense(self, n: int) -> np.ndarray:
+        raise ValueError(
+            "a Gated realization is runtime-valued; it has no concrete "
+            "dense matrix")
+
+
+Realization = Shifts | Matching | Dense | Identity | Gated
 IDENTITY = Identity()
 
 

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import gossip as gossip_mod
+from . import schedule as schedule_mod
 from .topology import Topology
 
 PyTree = Any
@@ -66,6 +67,8 @@ __all__ = [
     "trace_momentum",
     "scale_by_lr",
     "gossip",
+    "deadline_skip",
+    "al_dsgd",
     "quantize_int8",
     "allreduce_warmup",
     "average_gradients",
@@ -83,11 +86,20 @@ class OptState(NamedTuple):
     ``buf`` is the overlapped pipeline's in-flight gossip payload: the
     packed flat buffer(s) of the PREVIOUS step's pre-mix payload, whose
     permute+combine is applied one step late (``None`` for synchronous
-    optimizers and before the pipeline's first -- priming -- step)."""
+    optimizers and before the pipeline's first -- priming -- step).
+
+    ``sched_pos`` is the TRACED gossip schedule position for
+    data-dependent-skip chains (``gossip(when=...)``): which realization of
+    the topology's period fires next.  It advances only on rounds that
+    actually communicate (``schedule.advance_position``), so a finite-time
+    family still exactly averages after ``period`` COMMUNICATING rounds no
+    matter how many skips interleave.  ``None`` for statically scheduled
+    optimizers."""
 
     momentum: PyTree
     count: jax.Array   # scalar int32 step counter
     buf: Any = None    # in-flight packed payload (overlap pipeline only)
+    sched_pos: Any = None   # traced gossip schedule position (when= chains)
 
 
 @dataclasses.dataclass
@@ -98,6 +110,17 @@ class Context:
     lr: Any                # scalar learning rate (traced or python float)
     count: jax.Array       # steps completed so far (state.count)
     mix: Callable[[PyTree], PyTree]   # realization-bound gossip executor
+    # per-node runtime step data (losses, deadline flags) from
+    # update(..., aux=...) -- what loss-aware weights and deadline gates
+    # read; computed inside the step trace, so it adds no executable args
+    aux: dict | None = None
+    # (n,) bool: which nodes participate in this step's gossip (set by
+    # deadline_skip, consumed by the gossip transform's mix call)
+    node_gate: Any = None
+    # traced schedule position (state.sched_pos) for when= chains, and the
+    # gate the gossip transform resolved this step (drives the advance)
+    sched_pos: Any = None
+    sched_gate: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +145,11 @@ class Transform:
     where: tuple = ()
     every: int = 1
     overlap: bool = False
+    # runtime-valued gossip hooks (set by :func:`gossip`): a loss-aware
+    # weight rule (meta + edge_weight, e.g. :func:`al_dsgd`) and a traced
+    # whole-round skip predicate ``when(ctx) -> bool scalar``
+    weights_from: Any = None
+    when: Any = None
 
 
 def _f32(x):
@@ -174,7 +202,8 @@ def scale_by_lr(momentum: str = "m", *, out: str = "x_next") -> Transform:
 
 
 def gossip(where: tuple = ("x_next",), every: int = 1,
-           overlap: bool = False) -> Transform:
+           overlap: bool = False, weights_from=None,
+           when=None) -> Transform:
     """Partially average the named tensors with this step's ``W^{(k)}``.
 
     All tensors in one ``where`` tuple are mixed as a SINGLE pytree, so the
@@ -199,23 +228,137 @@ def gossip(where: tuple = ("x_next",), every: int = 1,
     inputs, and no transform may run after the gossip (checked at
     :func:`chain` time).  Drive overlapped optimizers through
     :class:`repro.core.plan.GossipPlan`, which owns the priming step, the
-    phase-keyed compiles, and checkpoint flushes."""
+    phase-keyed compiles, and checkpoint flushes.
+
+    ``weights_from=`` binds a loss-aware weight rule (e.g. :func:`al_dsgd`):
+    its per-node metadata row (loss, grad norm) PIGGYBACKS on the round's
+    existing permute -- zero extra collectives -- and its ``edge_weight``
+    reweights each edge from (own, received) metadata inside the combine.
+
+    ``when=`` makes the round's skip decision DATA-DEPENDENT: a traced
+    predicate ``when(ctx) -> bool scalar`` (e.g. read from ``ctx.aux``)
+    decides inside the jitted step whether this round communicates,
+    generalizing ``every=k``.  The schedule position then lives in
+    optimizer state (``OptState.sched_pos``) and advances only on
+    communicating rounds, so finite-time exact averaging survives
+    arbitrary skips; the wire is still issued on skipped rounds (the
+    combine is gated, not the permute -- no collective under a cond).
+    Both hooks refuse int8 compression and the overlap pipeline at
+    :func:`chain` time."""
     where = tuple(where)
     if every < 1:
         raise ValueError(f"gossip(every=...) needs every >= 1, got {every}")
+    if when is not None and every > 1:
+        raise ValueError("gossip(when=...) generalizes every=k (the traced "
+                         "gate decides which rounds communicate); set one, "
+                         "not both")
 
     def apply(ctx):
+        kw = {}
+        if weights_from is not None:
+            kw["meta"] = weights_from.meta(ctx)
+            kw["edge_weight"] = weights_from.edge_weight
+        if ctx.node_gate is not None:
+            kw["node_gate"] = ctx.node_gate
+        payload = (ctx.tensors[where[0]] if len(where) == 1
+                   else tuple(ctx.tensors[k] for k in where))
+        if when is not None:
+            gate = when(ctx)
+            ctx.sched_gate = gate
+            mixed = ctx.mix(payload, ctx.sched_pos, gate, **kw)
+        else:
+            mixed = ctx.mix(payload, **kw)
         if len(where) == 1:
-            ctx.tensors[where[0]] = ctx.mix(ctx.tensors[where[0]])
-            return
-        mixed = ctx.mix(tuple(ctx.tensors[k] for k in where))
-        for k, v in zip(where, mixed):
-            ctx.tensors[k] = v
+            ctx.tensors[where[0]] = mixed
+        else:
+            for k, v in zip(where, mixed):
+                ctx.tensors[k] = v
 
     name = f"gossip{where}" + (f"@every{every}" if every > 1 else "") \
-        + ("@overlap" if overlap else "")
+        + ("@overlap" if overlap else "") \
+        + ("@loss_aware" if weights_from is not None else "") \
+        + ("@when" if when is not None else "")
     return Transform(name, (), None, apply, where=where, every=every,
-                     overlap=overlap)
+                     overlap=overlap, weights_from=weights_from, when=when)
+
+
+def deadline_skip(flag: str = "alive") -> Transform:
+    """Straggler tolerance: gate this step's gossip PER NODE on the
+    deadline flag ``aux[flag]`` ((n,) bool, True = the node produced its
+    payload in time).
+
+    A flagged-out node realizes ``Identity`` for the round: an edge mixes
+    only when BOTH endpoints are alive (the flag rides the same permute as
+    the payload, so each receiver learns its sender's state for free), the
+    dropped edges' mass returns to the self weight, and symmetric
+    Matching rounds stay exactly mean-preserving.  The wire is still
+    issued -- deadline_skip trades STALENESS, not bytes; pair it with
+    ``gossip(when=...)`` to also skip whole rounds.
+
+    Must appear BEFORE the chain's gossip transform (checked at
+    :func:`chain` time); refuses int8 and overlap like every runtime hook.
+    """
+
+    def apply(ctx):
+        if ctx.aux is None or flag not in ctx.aux:
+            raise ValueError(
+                f"deadline_skip needs aux[{flag!r}] ((n,) bool per-node "
+                "deadline flags); pass aux=... to update/update_with_mix")
+        ctx.node_gate = jnp.asarray(ctx.aux[flag])
+
+    return Transform(f"deadline_skip({flag})", (), None, apply,
+                     tag="deadline")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdjacentLeaderPull:
+    """AL-DSGD-style loss-aware mixing weights (adjacent-leader pull).
+
+    Each node publishes its step loss (and optionally gradient norm) as a
+    metadata row riding the gossip permute; the receiver reweights each
+    edge ``w = base * 2 * sigmoid(pull * (own_score - recv_score))`` --
+    pulling HARDER from better-loss (lower-score) neighbors, up to twice
+    the base weight, and down to ~0 from worse ones.  The self weight is
+    derived as ``1 - sum`` per node, so rows stay stochastic; the matrix
+    is row- but not column-stochastic (the AL-DSGD trade: measured, not
+    assumed, in bench_hetero).  Degree-1 rounds (one-peer families,
+    matchings -- the AL-DSGD setting) keep every weight in ``[0, 1]``;
+    higher-degree Shifts rounds can drive the derived self weight negative
+    at large ``pull`` -- prefer one-peer schedules with this rule."""
+
+    pull: float = 2.0
+    gn_weight: float = 0.0
+
+    @property
+    def cols(self) -> int:
+        """Metadata columns this rule piggybacks (gossip_spec accounting)."""
+        return 2 if self.gn_weight else 1
+
+    def meta(self, ctx) -> jax.Array:
+        if ctx.aux is None or "loss" not in ctx.aux:
+            raise ValueError(
+                "gossip(weights_from=al_dsgd(...)) needs aux={'loss': (n,) "
+                "per-node losses}; pass aux=... to update/update_with_mix")
+        loss = jnp.asarray(ctx.aux["loss"], jnp.float32).reshape(-1)
+        if not self.gn_weight:
+            return loss
+        sq = None
+        for leaf in jax.tree.leaves(ctx.tensors["g"]):
+            s = jnp.sum(jnp.square(_f32(leaf)),
+                        axis=tuple(range(1, leaf.ndim)))
+            sq = s if sq is None else sq + s
+        return jnp.stack([loss, jnp.sqrt(sq)], axis=1)
+
+    def edge_weight(self, own, recv, base):
+        s = own[:, 0] - recv[:, 0]
+        if self.gn_weight:
+            s = s + self.gn_weight * (own[:, 1] - recv[:, 1])
+        return base * 2.0 * jax.nn.sigmoid(self.pull * s)
+
+
+def al_dsgd(pull: float = 2.0, gn_weight: float = 0.0) -> AdjacentLeaderPull:
+    """The :class:`AdjacentLeaderPull` rule for ``gossip(weights_from=...)``."""
+    return AdjacentLeaderPull(pull=pull, gn_weight=gn_weight)
 
 
 
@@ -406,6 +549,30 @@ class DecentralizedOptimizer:
         return True
 
     @property
+    def weights_from(self):
+        """The loss-aware weight rule bound via ``gossip(weights_from=...)``
+        (None for plain chains)."""
+        for t in self.transforms:
+            if t.where and t.weights_from is not None:
+                return t.weights_from
+        return None
+
+    @property
+    def scheduled_gossip(self) -> bool:
+        """True when a ``gossip(when=...)`` makes the skip decision a
+        traced value: the schedule position lives in ``OptState.sched_pos``
+        and :class:`repro.core.plan.GossipPlan` compiles ONE traced-position
+        executable (``scheduled=True``) instead of one per realization."""
+        return any(t.where and t.when is not None for t in self.transforms)
+
+    @property
+    def has_runtime_gossip(self) -> bool:
+        """Any runtime-valued gossip hook: loss-aware weights, data-
+        dependent skip, or per-node deadline gating."""
+        return (self.scheduled_gossip or self.weights_from is not None
+                or any(t.tag == "deadline" for t in self.transforms))
+
+    @property
     def slot_names(self) -> tuple:
         names: list = []
         for t in self.transforms:
@@ -422,11 +589,12 @@ class DecentralizedOptimizer:
             return {names[0]: state.momentum}
         return dict(state.momentum)
 
-    def _state_of(self, slots: dict, count, buf=None) -> OptState:
+    def _state_of(self, slots: dict, count, buf=None,
+                  sched_pos=None) -> OptState:
         names = self.slot_names
         if len(names) == 1:
-            return OptState(slots[names[0]], count, buf)
-        return OptState({k: slots[k] for k in names}, count, buf)
+            return OptState(slots[names[0]], count, buf, sched_pos)
+        return OptState({k: slots[k] for k in names}, count, buf, sched_pos)
 
     # -- public API -----------------------------------------------------------
 
@@ -437,17 +605,26 @@ class DecentralizedOptimizer:
                 continue
             for k, v in t.init(params).items():
                 slots.setdefault(k, v)
-        return self._state_of(slots, jnp.zeros((), jnp.int32))
+        sched = (schedule_mod.initial_position()
+                 if self.scheduled_gossip else None)
+        return self._state_of(slots, jnp.zeros((), jnp.int32), None, sched)
 
     def update_with_mix(self, params: PyTree, state: OptState, grads: PyTree,
-                        lr, mix: Callable[[PyTree], PyTree]
-                        ) -> tuple[PyTree, OptState]:
-        """One step with an explicitly injected gossip executor."""
+                        lr, mix: Callable[[PyTree], PyTree],
+                        aux: dict | None = None) -> tuple[PyTree, OptState]:
+        """One step with an explicitly injected gossip executor.
+
+        ``aux`` carries per-node runtime step data -- losses for
+        ``gossip(weights_from=...)``, deadline flags for
+        :func:`deadline_skip`, anything a ``when=`` predicate reads.  It is
+        consumed inside the step trace, so it never changes the compiled
+        executable's identity."""
         slots = self._slots_of(state)
         tensors = dict(slots)
         tensors["x"] = params
         tensors["g"] = grads
-        ctx = Context(tensors=tensors, lr=lr, count=state.count, mix=mix)
+        ctx = Context(tensors=tensors, lr=lr, count=state.count, mix=mix,
+                      aux=aux, sched_pos=state.sched_pos)
         for t in self.transforms:
             if t.apply is not None:
                 t.apply(ctx)
@@ -457,10 +634,14 @@ class DecentralizedOptimizer:
             s: jax.tree.map(lambda a, b: a.astype(b.dtype),
                             tensors[s + "_next"], slots[s])
             for s in self.slot_names}
-        return new_params, self._state_of(new_slots, state.count + 1)
+        sched = state.sched_pos
+        if sched is not None:
+            sched = schedule_mod.advance_position(sched, ctx.sched_gate)
+        return new_params, self._state_of(new_slots, state.count + 1, None,
+                                          sched)
 
     def update(self, params: PyTree, state: OptState, grads: PyTree,
-               step, lr) -> tuple[PyTree, OptState]:
+               step, lr, aux: dict | None = None) -> tuple[PyTree, OptState]:
         """One step; the gossip realization is resolved from ``step``."""
         if self.overlap:
             if not isinstance(step, (int, np.integer)):
@@ -472,7 +653,7 @@ class DecentralizedOptimizer:
             io = GossipPlan.for_optimizer(self).overlap_io(int(step))
             return self.update_pipelined(params, state, grads, lr, io)
         return self.update_with_mix(params, state, grads, lr,
-                                    self.mix_for_step(step))
+                                    self.mix_for_step(step), aux=aux)
 
     # -- overlapped (delayed-mix) pipeline ------------------------------------
 
@@ -573,9 +754,13 @@ class DecentralizedOptimizer:
         :meth:`GossipPlan.mix` (the ONE owner of the warm-up / neighbor /
         dense decision tree); a traced step takes the ``lax.switch`` path
         over a periodic schedule."""
-        if isinstance(step, (int, np.integer)):
+        if self.scheduled_gossip or isinstance(step, (int, np.integer)):
+            # a scheduled (when=) chain's executor ignores the step: the
+            # traced sched_pos selects the realization
             from .plan import GossipPlan
-            return GossipPlan.for_optimizer(self).mix(int(step))
+            plan = GossipPlan.for_optimizer(self)
+            return plan.mix(int(step) if isinstance(step, (int, np.integer))
+                            else 0)
         if self.warmup_steps or self.gossip_every > 1:
             raise ValueError(
                 "allreduce_warmup / gossip(every=k) need static-int steps "
@@ -602,6 +787,33 @@ def chain(*transforms, topology: Topology, name: str = "chain",
             "at least one (e.g. trace_momentum)")
     opt.gossip_every   # fail fast on mixed gossip(every=...) intervals
     opt.overlap        # fail fast on an invalid overlapped composition
+    whens = {t.when for t in ts if t.where}
+    if len(whens) > 1:
+        raise ValueError(
+            f"chain {name!r} mixes gossip(when=...) predicates; all gossip "
+            "transforms share one realization per step, so they must share "
+            "one skip gate")
+    if opt.has_runtime_gossip:
+        if opt.compression:
+            raise ValueError(
+                f"chain {name!r} combines int8 wire compression with "
+                "runtime-valued gossip (weights_from / when / "
+                "deadline_skip); the quantized combine needs static "
+                "weights -- drop one")
+        if opt.overlap:
+            raise ValueError(
+                f"chain {name!r} combines the overlap pipeline with "
+                "runtime-valued gossip (weights_from / when / "
+                "deadline_skip); the in-flight realization cannot depend "
+                "on traced values -- drop one")
+    deadline_idx = [i for i, t in enumerate(ts) if t.tag == "deadline"]
+    if deadline_idx:
+        gossip_idx = [i for i, t in enumerate(ts) if t.where]
+        if not gossip_idx or deadline_idx[0] > gossip_idx[0]:
+            raise ValueError(
+                f"chain {name!r} places deadline_skip after (or without) "
+                "its gossip transform; the gate must be set before the "
+                "mix consumes it")
     return opt
 
 
@@ -613,6 +825,12 @@ def allreduce_warmup(tau: int):
     key (a warm-up executable must never serve post-warm-up steps)."""
 
     def wrap(opt: DecentralizedOptimizer) -> DecentralizedOptimizer:
+        if opt.has_runtime_gossip:
+            raise ValueError(
+                f"chain {opt.name!r} has runtime-valued gossip "
+                "(weights_from / when / deadline_skip); the all-reduce "
+                "warm-up executor takes no runtime operands -- start the "
+                "runtime schedule after the warm-up, or drop one")
         return dataclasses.replace(opt, warmup_steps=int(tau))
 
     return wrap

@@ -11,7 +11,7 @@ from functools import partial  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
 from repro.core import gossip as gossip_mod  # noqa: E402
@@ -132,13 +132,18 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
         # GossipPlan resolves the phase's realization into a mixing
         # executor running shard-natively over the full logical mesh (one
         # explicit-pairs permute per dtype group, payload specs reusing the
-        # parameter placement rules so nothing is resharded); the dry-run
-        # keeps its own jit for the sharding/donation annotations.
+        # parameter placement rules so nothing is resharded); the plan also
+        # owns the jit contract -- donation + in/out shardings -- so the
+        # dry-run lowers via ``plan.lowered`` like every other path.
         spec_fn = sharding.gossip_payload_spec_fn(
             mesh, fsdp_params=knobs.get("fsdp_params", True))
-        plan = plan_mod.GossipPlan.for_optimizer(opt, mesh=mesh,
-                                                 specs=spec_fn)
-        fn = partial(step_fn, plan.mix(gossip_phase))
+        in_shardings = (p_specs, state_specs, bspec, P())
+        out_shardings = (p_specs, state_specs, P())
+        plan = plan_mod.GossipPlan.for_optimizer(
+            opt, fn=step_fn, mesh=mesh, specs=spec_fn,
+            donate_argnums=(0, 1),
+            in_shardings=sharding.named(in_shardings, mesh),
+            out_shardings=sharding.named(out_shardings, mesh))
         # roofline wire accounting straight off the realization IR: what
         # this phase's round SHOULD cost per node, before looking at HLO.
         ir = gossip_mod.gossip_spec(top, gossip_phase,
@@ -155,13 +160,8 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
         ir["payload_bytes_per_shard"] = (
             ir["payload_bytes_per_node"] // inner_shards)
         meta["gossip_ir"] = ir
-        in_shardings = (p_specs, state_specs, bspec, P())
-        out_shardings = (p_specs, state_specs, P())
-        jitted = jax.jit(fn, in_shardings=sharding.named(in_shardings, mesh),
-                         out_shardings=sharding.named(out_shardings, mesh),
-                         donate_argnums=(0, 1))
         with mesh:
-            lowered = jitted.lower(stacked, state, batch, lr)
+            lowered = plan.lowered(gossip_phase, stacked, state, batch, lr)
         return lowered, meta
 
     # serving paths: single replica sharded over (fsdp, model); batch on node

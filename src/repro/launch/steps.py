@@ -190,8 +190,17 @@ def make_train_step(cfg: M.ModelConfig,
             new_params, new_state = opt.update_pipelined(
                 params, opt_state, grads, lr, mix)
         else:
+            aux = None
+            if getattr(opt, "has_runtime_gossip", False):
+                # runtime-valued gossip reads per-node signals: the fresh
+                # losses (AL-DSGD weights) and any deadline/straggler flags
+                # the data pipeline attached to the batch
+                aux = {"loss": losses}
+                for key in ("alive", "comm"):
+                    if key in batch:
+                        aux[key] = batch[key]
             new_params, new_state = opt.update_with_mix(
-                params, opt_state, grads, lr, mix)
+                params, opt_state, grads, lr, mix, aux=aux)
         return new_params, new_state, losses.mean()
 
     return train_step

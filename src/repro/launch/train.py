@@ -29,7 +29,8 @@ from repro.launch import steps as steps_mod
 
 def build_trainer(cfg, topology, optimizer_name: str, beta: float,
                   micro_batch=None, momentum_dtype=None, warmup_steps=0,
-                  mesh=None, payload_specs=None, overlap=False):
+                  mesh=None, payload_specs=None, overlap=False,
+                  loss_aware=False, deadline=False):
     """Returns (opt, step_for) where ``step_for(step)`` is the compiled
     train-step callable for that step's gossip realization (the plan
     itself rides along as ``step_for.plan`` -- checkpoint flushes and
@@ -55,7 +56,8 @@ def build_trainer(cfg, topology, optimizer_name: str, beta: float,
     """
     opt = optim_mod.make_optimizer(optimizer_name, topology, beta=beta,
                                    momentum_dtype=momentum_dtype,
-                                   overlap=overlap)
+                                   overlap=overlap, loss_aware=loss_aware,
+                                   deadline=deadline)
     if warmup_steps:
         from repro.core.transforms import allreduce_warmup
         opt = allreduce_warmup(warmup_steps)(opt)
@@ -112,9 +114,16 @@ def run(args) -> dict:
     mom_dtype = {"bfloat16": jnp.bfloat16,
                  "float32": jnp.float32}.get(layout.get("momentum_dtype"))
     overlap = getattr(args, "overlap", False)
+    loss_aware = getattr(args, "loss_aware", False)
+    deadline = getattr(args, "deadline_skip", False)
+    straggler_prob = getattr(args, "straggler_prob", 0.0)
+    if straggler_prob and not deadline:
+        raise ValueError("--straggler-prob simulates missed deadlines; "
+                         "pair it with --deadline-skip")
     opt, step_for = build_trainer(cfg, top, args.optimizer, args.beta,
                                   args.micro_batch, momentum_dtype=mom_dtype,
-                                  overlap=overlap)
+                                  overlap=overlap, loss_aware=loss_aware,
+                                  deadline=deadline)
     plan = step_for.plan
 
     from repro.models import model as M
@@ -143,6 +152,13 @@ def run(args) -> dict:
             batch["image_embeds"] = jax.random.normal(
                 jax.random.key(step), (n, args.batch, cfg.n_image_tokens,
                                        cfg.d_model), jnp.float32)
+        if deadline:
+            # simulated stragglers: each node independently misses the
+            # round's deadline with prob p; the gossip drops it per node
+            # (both directions) and renormalizes the surviving weights
+            alive = jax.random.uniform(
+                jax.random.key(2**20 + step), (n,)) >= straggler_prob
+            batch["alive"] = alive
         lr = lr_fn(step)
         stacked, state, loss = step_for(step)(stacked, state, batch, lr)
         if step % args.log_every == 0 or step == args.steps - 1:
@@ -194,6 +210,18 @@ def main() -> None:
                     help="flush the in-flight overlap buffer into the "
                          "checkpoint (smaller artifact, resume re-primes) "
                          "instead of carrying it (bit-identical resume)")
+    ap.add_argument("--loss-aware", action="store_true",
+                    help="AL-DSGD adjacent-leader weights: pull harder from "
+                         "better-loss neighbors; the per-node losses ride "
+                         "the existing gossip permute (zero extra "
+                         "collectives)")
+    ap.add_argument("--deadline-skip", action="store_true",
+                    help="per-node straggler tolerance: nodes whose alive "
+                         "flag is False drop out of the round (skipped "
+                         "edges renormalize into the self weight)")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-step probability each node misses the gossip "
+                         "deadline (simulated; needs --deadline-skip)")
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=4, help="per-node batch")

@@ -1,0 +1,392 @@
+"""Runtime-valued realizations: traced weights, gated rounds, data-dependent
+schedules, loss-aware / deadline gossip -- the properties the refactor must
+hold:
+
+* static-weight rounds stay BIT-identical whether the weights arrive as
+  Python floats or traced arrays carrying the same values;
+* runtime-gated skip rounds preserve exact averaging for the finite-time
+  families once the schedule completes a full COMMUNICATING period;
+* a pool of runtime-weighted same-structure rounds compiles ONCE
+  (GossipPlan cache bounded by structure count, not weight values);
+* the piggybacked metadata adds bytes but ZERO collectives (gossip_spec
+  accounting here; the HLO assertion in the slow subprocess test);
+* every unsupported composition refuses loudly at chain construction.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip, optim, schedule, topology, transforms
+from repro.core.plan import GossipPlan
+from repro.core.topology import Gated, Matching, Topology
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(n, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((n, d + 1)), jnp.float32)}
+
+
+def _consensus(tree):
+    return max(float(jnp.max(jnp.abs(v - v.mean(0, keepdims=True))))
+               for v in jax.tree.leaves(tree))
+
+
+def _tree_equal(x, y):
+    return all(bool(jnp.all(a == b)) for a, b in
+               zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+
+# ---------------------------------------------------------------------------
+# Traced weights == static weights, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda n: topology.one_peer_exponential(n).realization(1),
+    lambda n: topology.one_peer_hypercube(n).realization(0),
+])
+def test_traced_weights_bit_identical_to_static(make, n=8):
+    r = make(n)
+    tree = _tree(n)
+    static = gossip.mix_realization(tree, r)
+    traced = gossip.mix_realization(
+        tree, r.with_weights(tuple(jnp.asarray(w, jnp.float32)
+                                   for w in r.weight_values())))
+    assert _tree_equal(static, traced)
+
+
+def test_python_bool_gate_folds_at_construction(n=8):
+    r = topology.one_peer_hypercube(n).realization(0)
+    assert Gated(r, True) is r
+    assert isinstance(Gated(r, False), topology.Identity)
+    with pytest.raises(TypeError):
+        Gated(Gated(r, jnp.asarray(True)), jnp.asarray(True))
+
+
+def test_gated_scalar_selects_mix_or_identity(n=8):
+    r = topology.one_peer_exponential(n).realization(0)
+    tree = _tree(n)
+    mixed = gossip.mix_realization(tree, r)
+    on = gossip.mix_realization(tree, Gated(r, jnp.asarray(True)))
+    off = gossip.mix_realization(tree, Gated(r, jnp.asarray(False)))
+    assert _tree_equal(on, mixed)
+    assert _tree_equal(off, tree)
+
+
+def test_gated_matching_partial_gate_preserves_mean_exactly(n=8):
+    """Per-node gating on a symmetric matching: an edge is active only when
+    BOTH endpoints are alive, so either both average or both keep -- the
+    global mean is preserved and dead nodes are bit-unchanged."""
+    r = topology.one_peer_hypercube(n).realization(0)
+    tree = _tree(n)
+    alive = jnp.asarray([True, False, True, True, True, False, True, True])
+    out = gossip.mix_realization(tree, Gated(r, alive))
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k]).mean(0),
+                                   np.asarray(tree[k]).mean(0), atol=2e-6)
+        dead = ~np.asarray(alive)
+        np.testing.assert_array_equal(np.asarray(out[k])[dead],
+                                      np.asarray(tree[k])[dead])
+
+
+# ---------------------------------------------------------------------------
+# Data-dependent skip: exact averaging after a full communicating period
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda n: topology.one_peer_exponential(n),
+    lambda n: topology.base_k(n, 1),
+    lambda n: topology.ceca(n),
+])
+def test_scheduled_skip_exact_averaging_after_full_period(make, n=8):
+    """Interleave data-dependent skip rounds with communicating rounds via
+    the traced schedule position: once ``period`` rounds have COMMUNICATED
+    (however many skips interleaved), the finite-time family has exactly
+    averaged -- the Remark-4 property survives runtime gating."""
+    top = make(n)
+    tree = _tree(n)
+    mean0 = {k: np.asarray(v).mean(0) for k, v in tree.items()}
+    pos = schedule.initial_position()
+    comms = 0
+    gates = [True, False, True, False, False, True, True, True]
+    for g in gates:
+        if comms == top.period:
+            break
+        gate = jnp.asarray(g)
+        tree = gossip.mix_scheduled(tree, top, pos, gate)
+        pos = schedule.advance_position(pos, gate)
+        comms += int(g)
+    assert comms == top.period and int(pos) == top.period
+    assert _consensus(tree) < 1e-4
+    for k, m in mean0.items():
+        np.testing.assert_allclose(np.asarray(tree[k]).mean(0), m, atol=1e-5)
+
+
+def test_scheduled_optimizer_advances_position_only_on_comm(n=8):
+    """gossip(when=...) end to end: ONE compiled executable, the schedule
+    position riding optimizer state and counting only communicating rounds,
+    convergence on a heterogeneous quadratic."""
+    rng = np.random.default_rng(0)
+    d = 5
+    A = jnp.asarray(rng.standard_normal((n, d, d)) * 0.2 + np.eye(d),
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, d)) * 0.3, jnp.float32)
+    opt = optim.dmsgd(topology.one_peer_exponential(n), beta=0.8,
+                      when=lambda ctx: ctx.aux["comm"])
+    params = {"x": jnp.zeros((n, d))}
+    state = opt.init(params)
+    plan = GossipPlan.for_optimizer(
+        opt, fn=lambda mix, p, s, g, lr, aux: opt.update_with_mix(
+            p, s, g, lr, mix, aux=aux))
+    T = 600
+    for k in range(T):
+        r = jnp.einsum("nij,nj->ni", A, params["x"]) - b
+        g = {"x": jnp.einsum("nij,ni->nj", A, r)}
+        params, state = plan.step_fn(k)(params, state, g, 0.05,
+                                        {"comm": jnp.asarray(k % 2 == 0)})
+    assert plan.num_compiled == 1
+    assert int(state.sched_pos) == T // 2      # odd steps skipped
+    H = np.einsum("nij,nik->jk", np.asarray(A), np.asarray(A)) / n
+    rhs = np.einsum("nij,ni->j", np.asarray(A), np.asarray(b)) / n
+    x_star = np.linalg.solve(H, rhs)
+    xs = np.asarray(params["x"])
+    assert np.linalg.norm(xs.mean(0) - x_star) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Compile-cache bounds under runtime weights
+# ---------------------------------------------------------------------------
+
+def test_plan_weighted_pool_compiles_once_per_structure(n=8):
+    """A cycle of SAME-structure matchings whose traced self weights differ
+    every visit compiles exactly ONE executable: values ride as arguments,
+    only structure keys the cache."""
+    partner = tuple(range(n - 1, -1, -1))
+    rng = np.random.default_rng(0)
+    reals = tuple(
+        Matching(partner, jnp.asarray(w, jnp.float32))
+        for w in rng.uniform(0.3, 0.7, size=4))
+    top = Topology("weighted_pool", n, max_degree=1, realizations=reals)
+    plan = GossipPlan(top, fn=lambda mix, t: mix(t))
+    tree = _tree(n)
+    for k in range(12):
+        plan.step_fn(k)(tree)
+    assert plan.num_compiled == 1
+    # the same pool with STATIC weights keys per value (historical behavior)
+    reals_s = tuple(Matching(partner, float(w))
+                    for w in rng.uniform(0.3, 0.7, size=4))
+    top_s = Topology("static_pool", n, max_degree=1, realizations=reals_s)
+    plan_s = GossipPlan(top_s, fn=lambda mix, t: mix(t))
+    for k in range(12):
+        plan_s.step_fn(k)(tree)
+    assert plan_s.num_compiled == 4
+
+
+def test_plan_gated_pool_shares_one_executable(n=8):
+    """Gated rounds with fresh per-node gates every step: one structure,
+    one compile."""
+    inner = topology.one_peer_hypercube(n).realization(0)
+    rng = np.random.default_rng(0)
+    reals = tuple(Gated(inner, jnp.asarray(rng.random(n) > 0.4))
+                  for _ in range(5))
+    top = Topology("gated_pool", n, max_degree=1, realizations=reals)
+    plan = GossipPlan(top, fn=lambda mix, t: mix(t))
+    tree = _tree(n)
+    for k in range(10):
+        plan.step_fn(k)(tree)
+    assert plan.num_compiled == 1
+
+
+def test_plan_static_keys_unchanged_by_refactor(n=8):
+    """Static-weight paths keep their historical value-based keys (compile
+    caches and HLO untouched by the structure-key refactor)."""
+    plan = GossipPlan(topology.one_peer_exponential(n),
+                      fn=lambda mix, t: mix(t))
+    keys = {plan.realization_key(k) for k in range(6)}
+    assert all(k[0] == "shifts" for k in keys)
+    assert len(keys) == 3          # tau = log2(8) value-distinct rounds
+
+
+# ---------------------------------------------------------------------------
+# Loss-aware / deadline optimizers on quadratics
+# ---------------------------------------------------------------------------
+
+def _quad_run(opt, n=8, d=5, T=400, lr=0.05, seed=0, aux_fn=None):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((n, d, d)) * 0.2 + np.eye(d),
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, d)) * 0.3, jnp.float32)
+    params = {"x": jnp.zeros((n, d))}
+    state = opt.init(params)
+    for k in range(T):
+        r = jnp.einsum("nij,nj->ni", A, params["x"]) - b
+        g = {"x": jnp.einsum("nij,ni->nj", A, r)}
+        aux = aux_fn(k, 0.5 * jnp.sum(r * r, axis=1)) if aux_fn else None
+        params, state = opt.update(params, state, g, k, lr, aux=aux)
+    H = np.einsum("nij,nik->jk", np.asarray(A), np.asarray(A)) / n
+    rhs = np.einsum("nij,ni->j", np.asarray(A), np.asarray(b)) / n
+    x_star = np.linalg.solve(H, rhs)
+    xs = np.asarray(params["x"])
+    return np.linalg.norm(xs.mean(0) - x_star)
+
+
+def test_al_dsgd_converges(n=8):
+    opt = optim.dmsgd(topology.one_peer_exponential(n), beta=0.8,
+                      loss_aware=True)
+    err = _quad_run(opt, n, aux_fn=lambda k, loss: {"loss": loss})
+    assert err < 0.15, err
+
+
+def test_deadline_skip_converges_with_stragglers(n=8):
+    opt = optim.dmsgd(topology.one_peer_exponential(n), beta=0.8,
+                      deadline=True, loss_aware=True)
+    rng = np.random.default_rng(1)
+    err = _quad_run(opt, n, aux_fn=lambda k, loss: {
+        "loss": loss, "alive": jnp.asarray(rng.random(n) > 0.25)})
+    assert err < 0.25, err
+
+
+# ---------------------------------------------------------------------------
+# gossip_spec metadata accounting
+# ---------------------------------------------------------------------------
+
+def test_gossip_spec_counts_meta_bytes_without_collectives(n=8):
+    import repro.core.flatbuf as flatbuf
+    top = topology.one_peer_exponential(n)
+    tree = {"w": jnp.zeros((n, 64), jnp.float32)}
+    layout = flatbuf.layout_of(tree)
+    base = gossip.gossip_spec(top, 0, layout=layout)
+    meta = gossip.gossip_spec(top, 0, layout=layout, meta_cols=2)
+    assert meta["collectives_per_step"] == base["collectives_per_step"]
+    mult = meta["wire_multiplier"]
+    assert meta["meta_bytes_per_node_per_step"] == 4 * 2 * mult
+    assert meta["bytes_per_node_per_step"] == \
+        base["bytes_per_node_per_step"] + 4 * 2 * mult
+    gated = gossip.gossip_spec(
+        Topology("g", n, max_degree=1,
+                 realizations=(Gated(top.realization(0),
+                                     jnp.asarray(True)),)), 0, layout=layout)
+    # a gated-off round still moves its bytes (wire always issued)
+    assert gated["gated"] is True
+    assert gated["bytes_per_node_per_step"] == base["bytes_per_node_per_step"]
+
+
+# ---------------------------------------------------------------------------
+# Refusals
+# ---------------------------------------------------------------------------
+
+def test_runtime_gossip_refuses_int8_compression(n=8):
+    with pytest.raises(ValueError, match="int8"):
+        optim.dmsgd(topology.one_peer_exponential(n), loss_aware=True,
+                    compression="int8")
+
+
+def test_runtime_gossip_refuses_overlap(n=8):
+    with pytest.raises(ValueError, match="overlap"):
+        optim.dmsgd(topology.one_peer_exponential(n), deadline=True,
+                    overlap=True)
+
+
+def test_runtime_gossip_refuses_warmup_wrap(n=8):
+    opt = optim.dmsgd(topology.one_peer_exponential(n), loss_aware=True)
+    with pytest.raises(ValueError, match="warm"):
+        transforms.allreduce_warmup(3)(opt)
+
+
+def test_when_refuses_every_gt_one():
+    with pytest.raises(ValueError, match="every"):
+        transforms.gossip(where=("x_next",), every=2,
+                          when=lambda ctx: True)
+
+
+def test_deadline_skip_must_precede_gossip(n=8):
+    with pytest.raises(ValueError, match="deadline"):
+        transforms.chain(
+            transforms.trace_momentum(0.9),
+            transforms.scale_by_lr("m"),
+            transforms.gossip(where=("m_next", "x_next")),
+            transforms.deadline_skip(),
+            topology=topology.one_peer_exponential(n), name="bad", beta=0.9)
+
+
+def test_scheduled_plan_refuses_aperiodic(n=8):
+    opt = optim.dmsgd(topology.bipartite_random_match(n, seed=0), beta=0.9,
+                      when=lambda ctx: ctx.aux["comm"])
+    with pytest.raises(topology.AperiodicScheduleError):
+        GossipPlan.for_optimizer(opt)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance HLO: loss-aware metadata rides the SAME permute
+# ---------------------------------------------------------------------------
+
+_HLO_RUNTIME_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro import configs
+    from repro.core import optim, topology
+    from repro.core.plan import GossipPlan
+    from repro.launch import steps as steps_mod
+    from repro.launch.hlo_cost import analyze_hlo
+    from repro.models import model as M
+
+    n = 8
+    mesh = Mesh(jax.devices()[:n], ("node",))
+    sh = NamedSharding(mesh, P("node"))
+    sh0 = NamedSharding(mesh, P())
+    cfg = configs.reduced_config(configs.get_config("qwen3-0.6b"))
+    params = jax.eval_shape(lambda: M.init(cfg, jax.random.key(0)))
+    stacked = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype, sharding=sh),
+        params)
+    batch = {"tokens": jax.ShapeDtypeStruct((n, 1, 16), jnp.int32,
+                                            sharding=sh),
+             "alive": jax.ShapeDtypeStruct((n,), jnp.bool_, sharding=sh)}
+    lr = jax.ShapeDtypeStruct((), jnp.float32, sharding=sh0)
+    top = topology.get_topology("one_peer_hypercube", n)
+
+    def counts(opt):
+        state = optim.OptState(
+            momentum=stacked,
+            count=jax.ShapeDtypeStruct((), jnp.int32, sharding=sh0))
+        step_fn = steps_mod.make_train_step(cfg, opt)
+        plan = GossipPlan.for_optimizer(opt, fn=step_fn, mesh=mesh)
+        txt = plan.lowered(0, stacked, state, batch, lr) \\
+                  .compile().as_text()
+        return analyze_hlo(txt).collective_counts
+
+    plain = counts(optim.dmsgd(top, beta=0.9))
+    rt = counts(optim.dmsgd(top, beta=0.9, loss_aware=True, deadline=True))
+    # acceptance: the loss/deadline metadata rides the EXISTING permute --
+    # identical collective counts, exactly one permute, zero all-gathers
+    assert plain.get("collective-permute", 0) == 1, plain
+    assert rt.get("collective-permute", 0) == 1, rt
+    assert rt.get("all-gather", 0) == 0, rt
+    assert dict(plain) == dict(rt), (plain, rt)
+    print("HLO-RUNTIME-OK")
+""")
+
+
+@pytest.mark.slow
+def test_hlo_loss_aware_adds_zero_collectives(tmp_path):
+    """Acceptance: the loss-aware + deadline train step compiles to the
+    SAME collective profile as plain DmSGD -- one collective-permute, no
+    all-gather; the per-node metadata columns piggyback on the existing
+    wire.  Own process: XLA's host device count locks at first init."""
+    script = tmp_path / "hlo_runtime.py"
+    script.write_text(_HLO_RUNTIME_SCRIPT)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, str(script)], env=env, cwd=REPO,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "HLO-RUNTIME-OK" in r.stdout
