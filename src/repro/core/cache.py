@@ -28,15 +28,27 @@ class CompileCache:
     def __init__(self, max_entries: int | None = None):
         self._cache: "OrderedDict" = OrderedDict()
         self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def get(self, key, build: Callable[[], Any]):
         if key in self._cache:
+            self.hits += 1
             self._cache.move_to_end(key)
             return self._cache[key]
+        self.misses += 1
         val = self._cache[key] = build()
         if self.max_entries is not None and len(self._cache) > self.max_entries:
             self._cache.popitem(last=False)
+            self.evictions += 1
         return val
+
+    def stats(self) -> dict:
+        """Hit/miss/eviction counters + current size.  A serving loop whose
+        bucketed shapes are working: misses stop growing after warmup."""
+        return {"entries": len(self._cache), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
 
     def __len__(self) -> int:
         return len(self._cache)

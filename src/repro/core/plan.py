@@ -313,6 +313,12 @@ class GossipPlan:
     def num_compiled(self) -> int:
         return len(self._cache)
 
+    def cache_stats(self) -> dict:
+        """Hit/miss/eviction counters of the underlying executable cache
+        (an aperiodic schedule that keeps missing is recompiling per
+        round; a steady-state plan should hit after warmup)."""
+        return self._cache.stats()
+
     # -- executors ------------------------------------------------------------
 
     def mix(self, step: int):

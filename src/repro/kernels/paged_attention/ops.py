@@ -1,0 +1,38 @@
+"""jit'd wrapper for the paged-attention Pallas kernel.
+
+Handles GQA head plumbing (queries grouped per kv head) and dtype
+management.  ``interpret`` defaults to True off-TPU so the kernel body
+runs (and is tested) on CPU, mirroring the flash_attention wrapper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "attn_cap", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    window: int | None = None,
+                    attn_cap: float | None = None,
+                    interpret: bool | None = None):
+    """q: (B, H, D); k_pages, v_pages: (Kv, n_pages, page_size, D);
+    page_table: (B, Pmax) int32; lengths: (B,) int32.  Returns (B, H, D).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, H, D = q.shape
+    Kv = k_pages.shape[0]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, D)
+    out = K.paged_attention_kernel(
+        qg, k_pages.astype(q.dtype), v_pages.astype(q.dtype),
+        page_table, lengths, window=window, attn_cap=attn_cap,
+        interpret=interpret)
+    return out.reshape(B, H, D)

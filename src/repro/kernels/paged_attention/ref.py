@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Semantics: one query token per sequence attends over its first
+``lengths[b]`` cached tokens, which live scattered across fixed-size pages
+of a shared pool; ``page_table[b, p]`` names the pool page holding tokens
+``[p * page_size, (p + 1) * page_size)`` of sequence ``b``.  GQA (query
+head groups share one kv head), optional sliding window and gemma-2 logit
+soft-capping, float32 softmax -- matching
+``repro.models.attention.attn_decode`` over an equivalent ring cache.
+
+``window``/``attn_cap`` may be traced scalars (the gemma-2 local/global
+flag rides a scanned array), which is why the model's fallback path calls
+this ref rather than the static-shape Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        window=None, attn_cap=None):
+    """q: (B, H, D); k_pages, v_pages: (Kv, n_pages, page_size, D);
+    page_table: (B, Pmax) int32; lengths: (B,) int32.  Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    Kv, _, page_size, _ = k_pages.shape
+    Pmax = page_table.shape[1]
+    G = H // Kv
+
+    # gather this batch's pages: (Kv, B, Pmax, ps, D) -> (B, Kv, T, D)
+    k = jnp.take(k_pages, page_table, axis=1)
+    v = jnp.take(v_pages, page_table, axis=1)
+    T = Pmax * page_size
+    k = k.transpose(1, 0, 2, 3, 4).reshape(B, Kv, T, D)
+    v = v.transpose(1, 0, 2, 3, 4).reshape(B, Kv, T, D)
+
+    qg = q.reshape(B, Kv, G, D)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    logits *= D ** -0.5
+    if attn_cap is not None:
+        logits = attn_cap * jnp.tanh(logits / attn_cap)
+    t = jnp.arange(T, dtype=jnp.int32)[None, :]        # (1, T)
+    ln = lengths[:, None]                              # (B, 1)
+    valid = t < ln
+    if window is not None:
+        # query position is lengths - 1: token j visible iff j > i - window
+        valid &= t > ln - 1 - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

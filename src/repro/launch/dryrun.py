@@ -162,6 +162,7 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
         meta["gossip_ir"] = ir
         with mesh:
             lowered = plan.lowered(gossip_phase, stacked, state, batch, lr)
+        meta["compile_cache"] = plan.cache_stats()
         return lowered, meta
 
     # serving paths: single replica sharded over (fsdp, model); batch on node
@@ -265,6 +266,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
               " dominant=%s" % (1e3 * r["compute_s"], 1e3 * r["memory_s"],
                                 1e3 * r["collective_s"], r["dominant"]))
         print("  lower=%.1fs compile=%.1fs" % (t_lower, t_compile))
+        if "compile_cache" in meta:
+            print("  compile_cache:", meta["compile_cache"])
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         tag = "2pod" if multi_pod else "1pod"

@@ -13,8 +13,8 @@ import jax.numpy as jnp
 
 from .layers import dense_init, rms_norm, rms_norm_init, rope
 
-__all__ = ["attn_init", "attn_apply", "attn_decode", "cross_attn_apply",
-           "KVCache", "init_kv_cache"]
+__all__ = ["attn_init", "attn_apply", "attn_decode", "attn_decode_paged",
+           "cross_attn_apply", "KVCache", "init_kv_cache"]
 
 NEG_INF = -2.0 ** 30
 
@@ -109,10 +109,14 @@ def _sdpa(q, k, v, mask, attn_cap=None, gqa_layout="grouped"):
 
 def attn_apply(params, x, *, n_heads, n_kv, head_dim, positions,
                rope_theta=10000.0, qk_norm=False, window=None,
-               attn_cap=None, impl="jnp", gqa_layout="grouped"):
+               attn_cap=None, impl="jnp", gqa_layout="grouped",
+               return_kv=False):
     """Causal self-attention on a full sequence (train / prefill).
 
     window: if set, token i attends to (i-window, i] (sliding window).
+    return_kv: also return the (rotated, normed) k, v as (B, S, Kv, hd) --
+      exactly what a decode cache stores -- so a serving prefill can fill
+      KV pages from one full-sequence forward.
     """
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, qk_norm,
@@ -129,8 +133,11 @@ def attn_apply(params, x, *, n_heads, n_kv, head_dim, positions,
             mask &= j > i - window
         out = _sdpa(q, k, v, mask[:, None], attn_cap, gqa_layout)
     dt = x.dtype
-    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, n_heads * head_dim),
-                      params["wo"].astype(dt))
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, n_heads * head_dim),
+                   params["wo"].astype(dt))
+    if return_kv:
+        return y, k, v
+    return y
 
 
 def attn_decode(params, x, cache: KVCache, idx, *, n_heads, n_kv, head_dim,
@@ -176,6 +183,57 @@ def attn_decode(params, x, cache: KVCache, idx, *, n_heads, n_kv, head_dim,
     dt = x.dtype
     y = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(dt))
     return y, KVCache(k, v)
+
+
+def attn_decode_paged(params, x, k_pages, v_pages, page_table, positions, *,
+                      page_size, n_heads, n_kv, head_dim,
+                      rope_theta=10000.0, qk_norm=False, window=None,
+                      attn_cap=None, impl="jnp"):
+    """One-token decode over a PAGED KV cache (continuous batching).
+
+    x: (B, 1, d); positions: (B,) int32 -- per-sequence absolute position
+    of the new token (continuous batching: every sequence is at its own
+    position).  k_pages, v_pages: (Kv, n_pages, page_size, hd) shared
+    pools; page_table: (B, Pmax) int32, row b's p-th entry names the pool
+    page holding tokens [p*page_size, (p+1)*page_size) of sequence b.
+
+    Writes (k, v) for position[b] into page ``page_table[b, pos//page_size]``
+    slot ``pos % page_size`` (the engine guarantees that page is allocated)
+    and attends over the first ``positions + 1`` tokens.  Returns
+    (y, k_pages, v_pages).
+
+    impl='pallas' uses the paged-attention kernel when the window is
+    static (None or int); a traced window (gemma-2's scanned local/global
+    flag) falls back to the pure-jnp gather, which handles traced masks.
+    """
+    B = x.shape[0]
+    pos2 = positions[:, None]                    # (B, 1)
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv, head_dim,
+                                   qk_norm, pos2, rope_theta)
+    pages = jnp.take_along_axis(
+        page_table, (positions // page_size)[:, None], axis=1)[:, 0]
+    slots = positions % page_size
+    kn = k_new[:, 0].transpose(1, 0, 2)          # (Kv, B, hd)
+    vn = v_new[:, 0].transpose(1, 0, 2)
+    k_pages = k_pages.at[:, pages, slots].set(kn.astype(k_pages.dtype))
+    v_pages = v_pages.at[:, pages, slots].set(vn.astype(v_pages.dtype))
+    lengths = positions + 1
+
+    static_window = window is None or isinstance(window, int)
+    if impl == "pallas" and static_window:
+        from repro.kernels.paged_attention import ops as paged_ops
+        out = paged_ops.paged_attention(
+            q[:, 0], k_pages, v_pages, page_table, lengths,
+            window=window, attn_cap=attn_cap)
+    else:
+        from repro.kernels.paged_attention import ref as paged_ref
+        out = paged_ref.paged_attention_ref(
+            q[:, 0], k_pages, v_pages, page_table, lengths,
+            window=window, attn_cap=attn_cap)
+    dt = x.dtype
+    y = jnp.einsum("bh,hd->bd", out.reshape(B, n_heads * head_dim),
+                   params["wo"].astype(dt))[:, None]
+    return y, k_pages, v_pages
 
 
 def cross_attn_init(key, d_model: int, n_heads: int, n_kv: int,

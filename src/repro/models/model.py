@@ -32,8 +32,13 @@ from .layers import dense_init, mlp_apply, mlp_init, rms_norm, rms_norm_init, so
 
 PyTree = Any
 
-__all__ = ["ModelConfig", "init", "forward", "decode_step", "init_cache",
+__all__ = ["ModelConfig", "init", "forward", "forward_prefill",
+           "decode_step", "decode_step_paged", "init_cache",
            "param_count", "active_param_count"]
+
+# families whose decode state is a uniform per-layer self-attention KV --
+# the ones the paged serving plane (repro.serve) supports natively
+PAGED_FAMILIES = ("dense", "moe", "audio")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,15 +229,17 @@ def _effective_window(cfg: ModelConfig, is_local):
     return cfg.sliding_window
 
 
-def _dense_block(cfg: ModelConfig, p, x, positions, is_local, aux):
+def _dense_block(cfg: ModelConfig, p, x, positions, is_local, aux,
+                 collect_kv=False):
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
-    h = attn.attn_apply(
+    out = attn.attn_apply(
         p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
         head_dim=cfg.head_dim, positions=positions,
         rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
         window=_effective_window(cfg, is_local),
         attn_cap=cfg.attn_softcap, impl=cfg.attention_impl,
-        gqa_layout=cfg.gqa_layout)
+        gqa_layout=cfg.gqa_layout, return_kv=collect_kv)
+    h, kv = (out[0], out[1:]) if collect_kv else (out, None)
     x = x + h
     h = rms_norm(p["ln2"], x, cfg.norm_eps)
     if "moe" in p:
@@ -243,6 +250,8 @@ def _dense_block(cfg: ModelConfig, p, x, positions, is_local, aux):
         aux = aux + aux_l
     else:
         h = mlp_apply(p["mlp"], h, cfg.mlp_kind)
+    if collect_kv:
+        return x + h, aux, kv
     return x + h, aux
 
 
@@ -256,20 +265,26 @@ def _mamba_block(cfg: ModelConfig, p, x):
     return x + h
 
 
+def _embed_tokens(params: PyTree, cfg: ModelConfig, tokens):
+    """tokens: (B, S) int32 (audio: (B, S, K)) -> activations (B, S, d)."""
+    adt = cfg.activation_dtype
+    if cfg.family == "audio":
+        x = sum(params["embed"][k].astype(adt)[tokens[:, :, k]]
+                for k in range(cfg.n_codebooks))
+    else:
+        x = params["embed"].astype(adt)[tokens]
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)  # gemma-style scaling
+    return x
+
+
 def forward(params: PyTree, cfg: ModelConfig, tokens, *, image_embeds=None,
             positions=None):
     """tokens: (B, S) int32 — or (B, S, K) for audio.  Returns logits
     (B, S, V) (audio: (B, S, K, V)) plus scalar aux loss."""
     adt = cfg.activation_dtype
-    if cfg.family == "audio":
-        B, S, K = tokens.shape
-        x = sum(params["embed"][k].astype(adt)[tokens[:, :, k]]
-                for k in range(K))
-    else:
-        B, S = tokens.shape
-        x = params["embed"].astype(adt)[tokens]
-    if cfg.family in ("dense", "moe", "vlm", "audio"):
-        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)  # gemma-style scaling
+    B, S = tokens.shape[0], tokens.shape[1]
+    x = _embed_tokens(params, cfg, tokens)
     if positions is None:
         rows = 1 if cfg.broadcast_positions else B
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
@@ -338,6 +353,43 @@ def forward(params: PyTree, cfg: ModelConfig, tokens, *, image_embeds=None,
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = _lm_head(params, cfg, x)
     return logits, aux
+
+
+def forward_prefill(params: PyTree, cfg: ModelConfig, tokens, *,
+                    positions=None):
+    """Full-sequence serving prefill: one forward pass that ALSO returns
+    the per-layer decode KV, so caches (ring slots or pages) fill without
+    the token-by-token demo loop.
+
+    tokens: (B, S) int32 (audio: (B, S, K)).  Returns
+    ``(logits, (k, v))`` with k, v shaped (L, B, S, Kv, hd) -- the
+    rotated/normed tensors a decode cache stores.  Uniform-attention
+    families only (:data:`PAGED_FAMILIES`); SSM/hybrid/vlm keep their
+    own prefill paths.
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"forward_prefill supports {PAGED_FAMILIES}, not {cfg.family}")
+    B, S = tokens.shape[0], tokens.shape[1]
+    x = _embed_tokens(params, cfg, tokens)
+    if positions is None:
+        rows = 1 if cfg.broadcast_positions else B
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                     (rows, S))
+    aux0 = jnp.zeros((), jnp.float32)
+    local_flags = _local_flags(cfg)
+
+    def body(carry, inp):
+        x, aux = carry
+        p, flag = inp
+        x, aux, (k, v) = _dense_block(cfg, p, x, positions, flag, aux,
+                                      collect_kv=True)
+        return (x, aux), (k, v)
+
+    (x, _), (k_all, v_all) = jax.lax.scan(body, (x, aux0),
+                                          (params["layers"], local_flags))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_head(params, cfg, x), (k_all, v_all)
 
 
 def _hybrid_forward(params, cfg, x, positions, aux):
@@ -450,17 +502,7 @@ def decode_step(params: PyTree, cfg: ModelConfig, token, cache: PyTree, idx,
                 *, image_embeds=None):
     """One-token decode. token: (B,1) int32 (audio: (B,1,K)); idx scalar.
     Returns (logits, new_cache)."""
-    adt = cfg.activation_dtype
-    if cfg.family == "audio":
-        B = token.shape[0]
-        x = sum(params["embed"][k].astype(adt)[token[:, :, k]]
-                for k in range(cfg.n_codebooks))
-    else:
-        B = token.shape[0]
-        x = params["embed"].astype(adt)[token]
-    if cfg.family in ("dense", "moe", "vlm", "audio"):
-        x = x * jnp.asarray(cfg.d_model ** 0.5, adt)
-
+    x = _embed_tokens(params, cfg, token)
     fam = cfg.family
 
     def dense_decode(p, x, kvc, is_local):
@@ -514,7 +556,7 @@ def decode_step(params: PyTree, cfg: ModelConfig, token, cache: PyTree, idx,
         x, new_cache = _hybrid_decode(params, cfg, x, cache, idx)
     elif fam == "vlm":
         assert image_embeds is not None
-        img = image_embeds.astype(adt)
+        img = image_embeds.astype(cfg.activation_dtype)
         n_groups = cfg.n_layers // cfg.cross_attn_every
         n_self = cfg.cross_attn_every - 1
         flags = _local_flags(cfg, n_groups * n_self).reshape(n_groups, n_self)
@@ -548,6 +590,48 @@ def decode_step(params: PyTree, cfg: ModelConfig, token, cache: PyTree, idx,
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = _lm_head(params, cfg, x)
     return logits, new_cache
+
+
+def decode_step_paged(params: PyTree, cfg: ModelConfig, token, pool,
+                      page_table, positions, *, page_size: int):
+    """One-token decode over a PAGED KV pool (continuous batching).
+
+    token: (B, 1) int32 (audio: (B, 1, K)); positions: (B,) int32 -- each
+    sequence decodes at its OWN absolute position.  pool: ``{"k", "v"}``
+    shaped (L, Kv, n_pages, page_size, hd); page_table: (B, Pmax) int32.
+    Returns (logits, new_pool).  Uniform-attention families only
+    (:data:`PAGED_FAMILIES`).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"decode_step_paged supports {PAGED_FAMILIES}, not {cfg.family}")
+    x = _embed_tokens(params, cfg, token)
+    flags = _local_flags(cfg)
+
+    def body(x, inp):
+        p, kp, vp, flag = inp
+        h = rms_norm(p["ln1"], x, cfg.norm_eps)
+        h, kp, vp = attn.attn_decode_paged(
+            p["attn"], h, kp, vp, page_table, positions,
+            page_size=page_size, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, window=_effective_window(cfg, flag),
+            attn_cap=cfg.attn_softcap, impl=cfg.attention_impl)
+        x = x + h
+        h = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            # decode is always dropless (see decode_step)
+            h, _ = moe_mod.moe_apply(p["moe"], h, n_experts=cfg.n_experts,
+                                     top_k=cfg.top_k, dropless=True)
+        else:
+            h = mlp_apply(p["mlp"], h, cfg.mlp_kind)
+        return x + h, (kp, vp)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        body, x, (params["layers"], pool["k"], pool["v"], flags))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(params, cfg, x)
+    return logits, {"k": k_all, "v": v_all}
 
 
 def _hybrid_decode(params, cfg, x, cache, idx):

@@ -1,0 +1,19 @@
+"""Production serving plane: paged KV cache + continuous batching.
+
+Layers (host -> device):
+  pages.py      -- page pool arrays + free-list :class:`PageAllocator`
+  scheduler.py  -- admission / page growth / LIFO preemption
+  engine.py     -- :class:`ServeEngine` step loop over bucketed executables
+
+The paged-attention kernel itself lives in
+:mod:`repro.kernels.paged_attention`; the model-side entry points are
+:func:`repro.models.model.forward_prefill` and
+:func:`repro.models.model.decode_step_paged`.
+"""
+from .engine import ServeEngine
+from .pages import TRASH_PAGE, PageAllocator, init_page_pool, page_bytes, \
+    pages_needed
+from .scheduler import Request, Scheduler, StepPlan
+
+__all__ = ["ServeEngine", "PageAllocator", "init_page_pool", "page_bytes",
+           "pages_needed", "TRASH_PAGE", "Request", "Scheduler", "StepPlan"]

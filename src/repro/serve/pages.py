@@ -1,0 +1,97 @@
+"""Paged KV cache: a shared page pool + a host-side free-list allocator.
+
+The serving plane replaces the dense ring :class:`repro.models.attention.
+KVCache` (``B x cache_len`` regardless of live tokens) with fixed-size
+token PAGES drawn from one pool per layer: a sequence holding ``T`` tokens
+owns ``ceil(T / page_size)`` pages, so KV memory scales with live tokens
+across the whole fleet of requests, not with the worst case.
+
+Device side (:func:`init_page_pool`): ``{"k", "v"}`` arrays shaped
+``(L, Kv, n_pages, page_size, head_dim)`` -- the per-layer pools the
+paged-attention kernel gathers from via a page table.
+
+Host side (:class:`PageAllocator`): a free-list over page indices with
+all-or-nothing allocation (a request either gets every page it needs or
+none -- no partial holds deadlocking the pool) and peak-usage tracking
+for the memory benchmark.  Page 0 is RESERVED as the trash page: padded
+rows of a bucketed batch point their page tables at it, so their writes
+land somewhere harmless and never touch a live request's pages.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+__all__ = ["PageAllocator", "init_page_pool", "pages_needed", "page_bytes",
+           "TRASH_PAGE"]
+
+TRASH_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+def init_page_pool(cfg: M.ModelConfig, *, n_pages: int, page_size: int,
+                   dtype=jnp.bfloat16) -> dict:
+    """Per-layer KV page pools for a paged-family config."""
+    if cfg.family not in M.PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged serving supports {M.PAGED_FAMILIES}, not {cfg.family}")
+    shape = (cfg.n_layers, cfg.n_kv_heads, n_pages, page_size, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def page_bytes(cfg: M.ModelConfig, page_size: int, dtype=jnp.bfloat16) -> int:
+    """HBM bytes one pool page costs across all layers (k AND v)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return (2 * cfg.n_layers * cfg.n_kv_heads * page_size * cfg.head_dim
+            * itemsize)
+
+
+class PageAllocator:
+    """Free-list allocator over pool page indices (page 0 reserved).
+
+    ``alloc`` is all-or-nothing: it returns ``None`` rather than a partial
+    grant, so the scheduler's admission/preemption logic sees one atomic
+    can-I-fit decision.  ``peak_used`` tracks the high-water mark for the
+    paged-vs-dense memory comparison in ``bench_serve``.
+    """
+
+    def __init__(self, n_pages: int, reserved: int = 1):
+        if n_pages <= reserved:
+            raise ValueError(f"pool of {n_pages} pages leaves nothing to "
+                             f"allocate past {reserved} reserved")
+        self.n_pages = n_pages
+        self.reserved = reserved
+        self._free: deque[int] = deque(range(reserved, n_pages))
+        self.peak_used = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - self.reserved - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        got = [self._free.popleft() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.used_pages)
+        return got
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if not (self.reserved <= p < self.n_pages):
+                raise ValueError(f"freeing page {p} outside pool")
+        self._free.extend(pages)
+        if len(self._free) > self.n_pages - self.reserved:
+            raise RuntimeError("double free: free list exceeds pool")
